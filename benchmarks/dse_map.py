@@ -1,0 +1,38 @@
+"""Paper Fig 5: isopower design-space maps (CNN-only / Transformer-only /
+mixed) + the paper's headline optima (66x32 / 20x128 / ~20-32x32)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.dse import best_point, sweep
+from repro.core.workloads import dse_cnn_suite, dse_transformer_suite
+
+
+def bench() -> list[str]:
+    lines = []
+    rows = (8, 16, 20, 32, 48, 64, 66, 128, 256)
+    cols = (8, 16, 32, 64, 128, 256)
+    cnn = dse_cnn_suite()
+    tfm = dse_transformer_suite()
+    mixed = {**cnn, **tfm}
+    for name, suite, paper_opt in (("cnn", cnn, "66x32"),
+                                   ("transformer", tfm, "20x128"),
+                                   ("mixed", mixed, "20x32..32x32")):
+        t0 = time.time()
+        pts = sweep(suite, rows, cols)
+        us = (time.time() - t0) * 1e6 / len(pts)
+        best = best_point(pts)
+        lines.append(
+            f"dse/{name},{us:.0f},best={best.rows}x{best.cols};"
+            f"eff={best.effective_tops_at_tdp:.1f};paper_best={paper_opt}")
+        # square-vs-best comparison (the paper's non-square claim)
+        sq = {(p.rows, p.cols): p for p in pts}
+        for r in (32, 128):
+            if (r, r) in sq:
+                p = sq[(r, r)]
+                lines.append(
+                    f"dse/{name}/{r}x{r},{us:.0f},"
+                    f"eff={p.effective_tops_at_tdp:.1f};"
+                    f"vs_best={p.effective_tops_at_tdp / max(1e-9, best.effective_tops_at_tdp):.2f}")
+    return lines

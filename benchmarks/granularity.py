@@ -1,0 +1,41 @@
+"""Paper Table 2 + Fig 9: array granularity vs effective throughput @400W."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.dse import evaluate_design, table2_rows
+from repro.core.workloads import full_suite
+
+PAPER_TABLE2 = {  # (rows, cols) -> (util, effective TOPS @400W)
+    (512, 512): (0.103, 191.3), (256, 256): (0.140, 183.0),
+    (128, 128): (0.138, 205.0), (64, 64): (0.174, 200.9),
+    (16, 16): (0.400, 198.9), (32, 32): (0.394, 317.4),
+}
+
+
+def bench() -> list[str]:
+    lines = []
+    suite = full_suite(batch=1)
+    t0 = time.time()
+    rows = table2_rows(suite)
+    dt_us = (time.time() - t0) * 1e6 / max(1, len(rows))
+    best = max(rows, key=lambda p: p.effective_tops_at_tdp)
+    for p in rows:
+        pu, pe = PAPER_TABLE2[(p.rows, p.cols)]
+        lines.append(
+            f"granularity/{p.rows}x{p.cols},{dt_us:.0f},"
+            f"eff_tops={p.effective_tops_at_tdp:.1f};util={p.utilization:.3f};"
+            f"paper_eff={pe};paper_util={pu}")
+    lines.append(f"granularity/best,{dt_us:.0f},"
+                 f"{best.rows}x{best.cols}_eff={best.effective_tops_at_tdp:.1f}")
+    # Fig 9: per-model breakdown at the paper's two headline points
+    for name, gemms in suite.items():
+        e32 = evaluate_design(32, 32, {name: gemms}, num_pods=256)
+        e128 = evaluate_design(128, 128, {name: gemms}, num_pods=32)
+        lines.append(
+            f"granularity/fig9/{name},{dt_us:.0f},"
+            f"eff32x32={e32.effective_tops_at_tdp:.1f};"
+            f"eff128x128={e128.effective_tops_at_tdp:.1f};"
+            f"ratio={e32.effective_tops_at_tdp / max(1e-9, e128.effective_tops_at_tdp):.2f}")
+    return lines

@@ -1,0 +1,45 @@
+"""Paper Table 1 + Fig 12a: interconnect comparison.
+
+Busy-pods / cycles-per-tile come from the slice-accurate scheduler with the
+functional Butterfly-k router (exact edge conflicts); mW/byte from the
+calibrated stage model. Run at 64 pods on a CNN+BERT mix to keep the
+cycle-accurate Python scheduler fast; ratios are the paper's subject.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ArrayConfig, AcceleratorConfig, simulate
+from repro.core.simulator import icn_spec_for
+from repro.core.workloads import bert, resnet
+
+PAPER_TABLE1 = {  # type -> (busy %, cycles/tile, mW/B) at 256 pods
+    "butterfly-1": (66.81, 19.72, 0.23), "butterfly-2": (72.41, 20.17, 0.52),
+    "butterfly-4": (72.26, 20.27, 1.15), "butterfly-8": (72.43, 20.48, 2.53),
+    "crossbar": (72.38, 19.73, 7.36), "benes": (72.38, 30.00, 0.92),
+}
+
+
+def bench(pods: int = 256) -> list[str]:
+    from repro.core.simulator import merge_workloads
+    # batch-4 mix: enough parallel tiles to load 256 pods (the paper
+    # averages across its full benchmark suite)
+    wl = merge_workloads(resnet(50, 224, batch=2), bert("base", 100, batch=2))
+    lines = []
+    for icn in ("butterfly-1", "butterfly-2", "butterfly-4", "butterfly-8",
+                "crossbar", "benes"):
+        accel = AcceleratorConfig(
+            array=ArrayConfig(32, 32), num_pods=pods,
+            icn_mw_per_byte=icn_spec_for(icn, 256).mw_per_byte)
+        t0 = time.time()
+        r = simulate(wl, accel, interconnect=icn)
+        us = (time.time() - t0) * 1e6
+        pb, pc, pm = PAPER_TABLE1[icn]
+        mw = icn_spec_for(icn, 256).mw_per_byte
+        lines.append(
+            f"interconnect/{icn},{us:.0f},"
+            f"busy={100 * r.busy_pods:.1f}%;cyc_tile={r.cycles_per_tile:.1f};"
+            f"mw_b={mw:.2f};eff_tops={r.effective_tops_at_tdp:.1f};"
+            f"paper=({pb},{pc},{pm})")
+    return lines

@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness-shaped
+timings only; the BlockSpec geometry and VMEM working sets reported here
+are the TPU-relevant outputs)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.systolic_gemm.ops import systolic_gemm
+from repro.parallel.autoshard import choose_blocks
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def bench() -> list[str]:
+    rng = np.random.default_rng(0)
+    lines = []
+
+    M = K = N = 512
+    x8 = jnp.asarray(rng.integers(-100, 100, (M, K)), jnp.int8)
+    w8 = jnp.asarray(rng.integers(-100, 100, (K, N)), jnp.int8)
+    us = _time(systolic_gemm, x8, w8, interpret=True)
+    us_ref = _time(lambda a, b: jnp.dot(a.astype(jnp.int32),
+                                        b.astype(jnp.int32)), x8, w8)
+    bm, bn, bk = choose_blocks(M, K, N)
+    vmem_kb = 2 * 3 * (bm * bk + bk * bn + bm * bn) / 1024
+    lines.append(f"kernels/systolic_gemm_int8_{M},{us:.0f},"
+                 f"jnp_ref_us={us_ref:.0f};blocks={bm}x{bn}x{bk};"
+                 f"vmem_kb={vmem_kb:.0f}")
+
+    B, S, H, D = 1, 256, 4, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
+    us = _time(flash_attention, q, k, v, block_q=128, block_k=128,
+               interpret=True)
+    lines.append(f"kernels/flash_attn_s{S},{us:.0f},"
+                 f"blocks=128x128;vmem_kb="
+                 f"{(128 * D * 4 * 2 + 128 * D * 4) / 1024:.0f}")
+
+    b, S2, H2, P, Nn = 1, 256, 4, 32, 64
+    xs = jnp.asarray(rng.standard_normal((b, S2, H2, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, S2, H2)) * 0.3 + 0.1, jnp.float32)
+    A = jnp.asarray(-rng.random(H2) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((b, S2, 1, Nn)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b, S2, 1, Nn)), jnp.float32)
+    Dm = jnp.asarray(rng.random(H2), jnp.float32)
+    us = _time(lambda *a: ssd(*a, chunk=64, interpret=True)[0],
+               xs, dt, A, Bm, Cm, Dm)
+    lines.append(f"kernels/ssd_s{S2},{us:.0f},chunk=64;"
+                 f"state_scratch_kb={P * Nn * 4 / 1024:.0f}")
+    return lines

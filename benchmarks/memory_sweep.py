@@ -1,0 +1,42 @@
+"""Paper Fig 13 + §6.4: SRAM bank size vs DRAM traffic / effective
+throughput (ResNet-152 batch 8, the largest working set in the suite).
+
+Model: per-level working set = live activation tiles + double-buffered
+weights; overflow beyond the on-chip SRAM (banks x size) spills to HBM at
+DRAM_BW, stretching the level's execution time.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ArrayConfig, AcceleratorConfig, analyze
+from repro.core.simulator import _levels
+from repro.core.workloads import resnet
+
+DRAM_BW = 700e9   # HBM, TPUv3-like (§5)
+
+
+def bench(pods: int = 256) -> list[str]:
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=pods)
+    wl = resnet(152, 299, batch=8)
+    base = analyze(wl, accel)
+    lines = []
+    t0 = time.time()
+    for bank_kb in (64, 128, 256, 512, 1024):
+        sram = pods * bank_kb * 1024
+        spill = 0.0
+        compute_s = base.total_cycles / 1e9
+        for level in _levels(wl):
+            ws = 0
+            for g in level:
+                ws += g.d1 * g.d2 + 2 * g.d2 * g.d3 + 2 * g.d1 * g.d3
+            spill += max(0, ws - sram)
+        dram_s = spill / DRAM_BW
+        eff = base.effective_tops_at_tdp * compute_s / (compute_s + dram_s)
+        us = (time.time() - t0) * 1e6
+        lines.append(
+            f"memory/bank{bank_kb}kB,{us:.0f},"
+            f"eff_rel={eff / base.effective_tops_at_tdp:.3f};"
+            f"dram_gb={spill / 1e9:.1f}")
+    return lines

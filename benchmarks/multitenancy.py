@@ -1,0 +1,48 @@
+"""Paper Fig 11 + §6.1: batch scaling and multi-tenancy.
+
+ResNet saturates the pods alone; BERT (seq 100) starves 256 pods at batch 1
+and scales with batch; running both *in parallel* recovers the idle slots —
+the paper reports 1.44x over sequential execution.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ArrayConfig, AcceleratorConfig, analyze, merge_workloads
+from repro.core.workloads import bert, resnet
+
+
+def bench(pods: int = 256) -> list[str]:
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=pods)
+    lines = []
+    t0 = time.time()
+    for batch in (1, 2, 4, 8):
+        rn = analyze(resnet(152, 299, batch=batch), accel)
+        bt = analyze(bert("medium", 100, batch=batch), accel)
+        lines.append(f"multitenancy/batch{batch}/resnet152,0,"
+                     f"eff_tops={rn.effective_tops_at_tdp:.1f}")
+        lines.append(f"multitenancy/batch{batch}/bert-medium,0,"
+                     f"eff_tops={bt.effective_tops_at_tdp:.1f}")
+    # multi-tenant: resnet + bert co-scheduled vs back-to-back sequential,
+    # with the slice-accurate scheduler (the level-barrier analytic model
+    # under-reports cross-workload interleaving) at a sim-tractable scale
+    from repro.core import simulate
+    accel_s = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=128)
+    rn = resnet(50, 224)
+    bt = bert("medium", 100)
+    seq_r = simulate(rn, accel_s)
+    seq_b = simulate(bt, accel_s)
+    seq_cycles = seq_r.total_cycles + seq_b.total_cycles
+    util_seq = (seq_r.total_macs + seq_b.total_macs) / (
+        accel_s.num_pods * accel_s.array.num_pe * seq_cycles)
+    par = simulate(merge_workloads(rn, bt), accel_s)
+    eff_seq = accel_s.peak_ops_at_tdp * util_seq / 1e12
+    us = (time.time() - t0) * 1e6
+    lines.append(f"multitenancy/sequential,{us:.0f},eff_tops={eff_seq:.1f}")
+    lines.append(f"multitenancy/parallel,{us:.0f},"
+                 f"eff_tops={par.effective_tops_at_tdp:.1f}")
+    lines.append(f"multitenancy/gain,{us:.0f},"
+                 f"{par.effective_tops_at_tdp / max(1e-9, eff_seq):.2f}x"
+                 f";paper=1.44x")
+    return lines

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only granularity,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (dse_map, granularity, interconnect, kernels_bench,
+                            memory_sweep, multitenancy, scaling, tiling_sweep)
+    suites = {
+        "granularity": granularity.bench,       # Table 2 + Fig 9
+        "interconnect": interconnect.bench,     # Table 1 + Fig 12a
+        "tiling": tiling_sweep.bench,           # Fig 12b
+        "dse": dse_map.bench,                   # Fig 5
+        "multitenancy": multitenancy.bench,     # Fig 11
+        "memory": memory_sweep.bench,           # Fig 13
+        "scaling": scaling.bench,               # Fig 10
+        "kernels": kernels_bench.bench,         # §4.1 pod microarchitecture
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"{name}/_total,{(time.time() - t0) * 1e6:.0f},done",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig 10 + §6 conclusion: strong scaling with pod count / TDP.
+
+The paper reports up to ~600 TeraOps/s effective at 400 W for
+compute-intensive CNNs (ResNet) when scaling pods, while batch-1 BERT
+saturates early — reproduced with the analytical model.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ArrayConfig, AcceleratorConfig, analyze
+from repro.core.dse import build_accel
+from repro.core.workloads import bert, resnet
+
+
+def bench() -> list[str]:
+    lines = []
+    t0 = time.time()
+    for pods in (32, 64, 128, 256, 512):
+        accel = build_accel(32, 32, num_pods=pods)
+        rn = analyze(resnet(152, 299), accel)
+        bt = analyze(bert("base", 100), accel)
+        us = (time.time() - t0) * 1e6
+        # Fig 10 style: effective throughput at the design's own peak power
+        eff_r = rn.utilization * accel.peak_ops / 1e12
+        eff_b = bt.utilization * accel.peak_ops / 1e12
+        lines.append(f"scaling/pods{pods},{us:.0f},"
+                     f"tdp={accel.peak_watts:.0f}W;"
+                     f"resnet_eff={eff_r:.1f};bert_eff={eff_b:.1f};"
+                     f"resnet_eff@400W={rn.effective_tops_at_tdp:.1f}")
+    return lines

@@ -1,0 +1,34 @@
+"""Example: reproduce the paper's design-space exploration (Fig 5 / Table 2)
+and print an ASCII effective-throughput/W heatmap.
+
+    PYTHONPATH=src python examples/explore_design_space.py
+"""
+
+from repro.core.dse import best_point, evaluate_design, sweep, table2_rows
+from repro.core.workloads import full_suite
+
+suite = full_suite(batch=1)
+
+print("=== Table 2 (effective throughput @ 400 W) ===")
+print(f"{'design':>10} {'pods':>5} {'peak':>6} {'util':>6} {'effective':>9}")
+for p in table2_rows(suite):
+    print(f"{p.rows:>4}x{p.cols:<5} {p.num_pods:>5} "
+          f"{p.peak_tops_at_tdp:>6.0f} {p.utilization:>6.3f} "
+          f"{p.effective_tops_at_tdp:>9.1f}")
+
+rows = (8, 16, 32, 64, 128, 256)
+cols = (8, 16, 32, 64, 128, 256)
+pts = sweep(suite, rows, cols)
+best = best_point(pts)
+print(f"\n=== Fig 5c heatmap (mixed suite), best {best.rows}x{best.cols} "
+      f"@ {best.effective_tops_at_tdp:.0f} TOPS ===")
+grid = {(p.rows, p.cols): p.effective_tops_at_tdp for p in pts}
+mx = max(grid.values())
+shades = " .:-=+*#%@"
+print("      " + "".join(f"{c:>6}" for c in cols) + "   (cols)")
+for r in rows:
+    cells = "".join(
+        f"{shades[min(9, int(10 * grid[(r, c)] / mx))] * 5:>6}"
+        for c in cols)
+    print(f"{r:>5} {cells}")
+print("(rows)   darker = higher effective TOPS/W")

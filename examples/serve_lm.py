@@ -1,0 +1,16 @@
+"""Example: batched serving with continuous batching (the paper's kind —
+SOSA is an inference accelerator; multi-tenant co-scheduling is its §6.1
+argument, realized here as mixed-length requests sharing decode batches).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import subprocess
+import sys
+
+p = subprocess.run([
+    sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",
+    "--reduced", "--requests", "6", "--slots", "3", "--max-new", "10",
+    "--max-len", "96"])
+assert p.returncode == 0
+print("batched serving example: OK")

@@ -1,0 +1,19 @@
+"""SOSA core: the paper's contribution (tiling, interconnect, scheduling,
+granularity DSE) as a composable library. See DESIGN.md §1/§3."""
+
+from .arrays import (AcceleratorConfig, ArrayConfig, max_pods_under_tdp,
+                     monolithic, sosa)
+from .interconnect import (ButterflyRouter, IcnSpec, benes_spec,
+                           butterfly_spec, crossbar_spec, htree_spec,
+                           make_router, mesh_spec)
+from .scheduler import Schedule, SliceScheduler
+from .simulator import SimResult, analyze, merge_workloads, simulate
+from .tiling import GemmSpec, TileOp, TileOpGraph, tile_gemm, tile_workload
+
+__all__ = [
+    "AcceleratorConfig", "ArrayConfig", "max_pods_under_tdp", "monolithic",
+    "sosa", "ButterflyRouter", "IcnSpec", "benes_spec", "butterfly_spec",
+    "crossbar_spec", "htree_spec", "make_router", "mesh_spec", "Schedule",
+    "SliceScheduler", "SimResult", "analyze", "merge_workloads", "simulate",
+    "GemmSpec", "TileOp", "TileOpGraph", "tile_gemm", "tile_workload",
+]

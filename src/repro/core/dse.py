@@ -1,0 +1,111 @@
+"""Design-space exploration for array granularity (SOSA §3.1, Fig 5, Table 2).
+
+Isopower sweep: for every candidate (rows, cols) the pod count is the
+largest power of two under the 400 W TDP (arrays.max_pods_under_tdp), and
+the score is effective throughput @ TDP — peak(isopower) x utilization —
+averaged over the workload suite weighted by ops.
+
+The sweep uses the analytical wave model (simulator.analyze); selected
+design points are cross-checked with the slice-accurate scheduler in
+tests/test_simulator.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .arrays import ArrayConfig, AcceleratorConfig, max_pods_under_tdp
+from .simulator import SimResult, analyze
+from .tiling import GemmSpec
+
+
+@dataclasses.dataclass
+class DsePoint:
+    rows: int
+    cols: int
+    num_pods: int
+    peak_tops_at_tdp: float
+    utilization: float
+    effective_tops_at_tdp: float
+    effective_tops_per_watt: float
+
+
+def build_accel(rows: int, cols: int, interconnect: str = "butterfly-2",
+                tdp: float = 400.0, num_pods: int | None = None) -> AcceleratorConfig:
+    arr = ArrayConfig(rows=rows, cols=cols)
+    if num_pods is None:
+        # first pass with the 256-port mW/B, then refine for actual count
+        mw = _mw_per_byte(interconnect, 256)
+        num_pods = max_pods_under_tdp(arr, mw, tdp)
+    mw = _mw_per_byte(interconnect, max(2, num_pods))
+    return AcceleratorConfig(array=arr, num_pods=num_pods,
+                             icn_mw_per_byte=mw if num_pods > 1 else 0.0,
+                             tdp_watts=tdp)
+
+
+def _mw_per_byte(interconnect: str, ports: int) -> float:
+    from .simulator import icn_spec_for
+    return icn_spec_for(interconnect, ports).mw_per_byte
+
+
+def evaluate_design(
+    rows: int, cols: int,
+    workloads: dict[str, list[GemmSpec]],
+    interconnect: str = "butterfly-2",
+    tdp: float = 400.0,
+    num_pods: int | None = None,
+) -> DsePoint:
+    accel = build_accel(rows, cols, interconnect, tdp, num_pods)
+    # equal-weight average across benchmarks (Table 2 averages the ten
+    # benchmarks; ops-weighting would let BERT-large dominate and shift
+    # the optimum toward large arrays)
+    n = 0
+    eff_sum = 0.0
+    util_sum = 0.0
+    tpw_sum = 0.0
+    for name, gemms in workloads.items():
+        res = analyze(gemms, accel, interconnect, name=name)
+        n += 1
+        util_sum += res.utilization
+        eff_sum += res.effective_tops_at_tdp
+        tpw_sum += res.effective_tops_per_watt
+    n = max(1, n)
+    return DsePoint(
+        rows=rows, cols=cols, num_pods=accel.num_pods,
+        peak_tops_at_tdp=accel.peak_ops_at_tdp / 1e12,
+        utilization=util_sum / n,
+        effective_tops_at_tdp=eff_sum / n,
+        effective_tops_per_watt=tpw_sum / n,
+    )
+
+
+def sweep(
+    workloads: dict[str, list[GemmSpec]],
+    row_candidates: tuple[int, ...] = (8, 16, 20, 32, 48, 64, 66, 128, 256, 512),
+    col_candidates: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512),
+    interconnect: str = "butterfly-2",
+    tdp: float = 400.0,
+) -> list[DsePoint]:
+    out = []
+    for r in row_candidates:
+        for c in col_candidates:
+            out.append(evaluate_design(r, c, workloads, interconnect, tdp))
+    return out
+
+
+def best_point(points: list[DsePoint]) -> DsePoint:
+    return max(points, key=lambda p: p.effective_tops_at_tdp)
+
+
+def table2_rows(workloads: dict[str, list[GemmSpec]],
+                tdp: float = 400.0) -> list[DsePoint]:
+    """The paper's Table 2 design points (monolithic 512x512 ... 32x32)."""
+    rows = []
+    for (r, c, pods) in ((512, 512, 1), (256, 256, 8), (128, 128, 32),
+                         (64, 64, 128), (16, 16, 512), (32, 32, 256)):
+        # monolithic (pods == 1) gets icn_mw_per_byte = 0 inside build_accel
+        icn = "butterfly-2" if pods > 1 else "crossbar"
+        rows.append(evaluate_design(r, c, workloads, interconnect=icn,
+                                    tdp=tdp, num_pods=pods))
+    return rows

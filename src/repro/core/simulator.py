@@ -1,0 +1,263 @@
+"""SOSA performance/energy simulator.
+
+Two evaluation paths over the same tiling model:
+
+  * `simulate(...)`  — slice-accurate: runs the real offline scheduler
+    (core/scheduler.py) with the functional Butterfly-k router, bank ports
+    and RAW chains, then reduces the schedule to cycles / utilization /
+    effective throughput / energy. This is the paper's own methodology
+    (their artifact is a cycle-accurate simulator driven by a compiler).
+
+  * `analyze(...)`   — analytical: closed-form wave model of the same
+    tiling, used for the Fig-5 design-space sweeps where running the full
+    scheduler for every (r, c) point would be needlessly slow. Validated
+    against `simulate` in tests (tests/test_simulator.py).
+
+Both report the paper's headline metric, effective throughput @ TDP
+(= isopower peak throughput x utilization, Table 2).
+
+Interconnect latency exposure (Table 1 'cycles per tile op'): a slice's
+service time is max(k, r) streaming cycles + array fill/drain latency +
+any interconnect round-trip not hidden under the streaming time:
+    exposed = max(0, 2*stages - max(k, r))
+Benes' 2logN-1 (+copy network) stages exceed the 32-cycle tiles and become
+exposed — the paper's core argument against it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+
+from .arrays import (ACT_BYTES, E_MAC_PJ, E_SRAM_PJ_PER_BYTE, OPS_PER_MAC,
+                     PSUM_BYTES, WEIGHT_BYTES, AcceleratorConfig)
+from .interconnect import (benes_spec, butterfly_spec, crossbar_spec,
+                           htree_spec, mesh_spec)
+from .scheduler import SliceScheduler
+from .tiling import GemmSpec, TileOpGraph, tile_workload
+
+
+def icn_spec_for(name: str, ports: int):
+    if name.startswith("butterfly"):
+        k = int(name.split("-")[1]) if "-" in name else 1
+        return butterfly_spec(ports, k)
+    return {
+        "benes": benes_spec, "crossbar": crossbar_spec,
+        "mesh": mesh_spec, "htree": htree_spec,
+    }[name](ports)
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    total_macs: int
+    total_cycles: int
+    num_pods: int
+    utilization: float            # useful MACs / (PEs * cycles)
+    busy_pods: float              # fraction of pod-slices with work
+    cycles_per_tile: float        # avg service latency per tile op
+    effective_tops_at_tdp: float  # the paper's headline metric
+    peak_tops_at_tdp: float
+    energy_joules: float
+    avg_power_watts: float
+    num_tile_ops: int
+    num_slices: int
+
+    @property
+    def effective_tops_per_watt(self) -> float:
+        if self.avg_power_watts == 0:
+            return 0.0
+        macs_per_s = self.total_macs / (self.total_cycles / 1e9)
+        return macs_per_s * OPS_PER_MAC / 1e12 / self.avg_power_watts
+
+
+def _slice_cycles(accel: AcceleratorConfig, icn_name: str, k_bar: float) -> float:
+    """Service cycles per slice: streaming + fill/drain + exposed icn."""
+    arr = accel.array
+    stream = max(k_bar, arr.rows)
+    spec = icn_spec_for(icn_name, max(2, accel.num_pods))
+    exposed = max(0.0, 2 * spec.stages - stream)
+    return stream + arr.pipeline_latency + exposed
+
+
+def _energy(accel: AcceleratorConfig, graph: TileOpGraph, icn_name: str,
+            total_cycles: float) -> tuple[float, float]:
+    """(energy J, avg power W): MAC energy + bank bytes + interconnect."""
+    arr = accel.array
+    spec = icn_spec_for(icn_name, max(2, accel.num_pods))
+    e = 0.0
+    for op in graph.ops:
+        e += op.macs * E_MAC_PJ
+        xbytes = op.k * op.r_eff * ACT_BYTES
+        wbytes = op.r_eff * op.c_eff * WEIGHT_BYTES
+        pbytes = op.k * op.c_eff * PSUM_BYTES * (2 if op.j > 0 else 1)
+        moved = xbytes + wbytes + pbytes
+        e += moved * (E_SRAM_PJ_PER_BYTE + spec.mw_per_byte)  # pJ (mW/B @1GHz == pJ/B)
+    e *= 1e-12
+    t = total_cycles / arr.clock_hz
+    return e, (e / t if t > 0 else 0.0)
+
+
+def simulate(
+    gemms: list[GemmSpec],
+    accel: AcceleratorConfig,
+    interconnect: str = "butterfly-2",
+    k_part: int | None = None,
+    name: str = "",
+) -> SimResult:
+    """Slice-accurate simulation: tile -> schedule -> metrics."""
+    arr = accel.array
+    graph = tile_workload(gemms, arr, k_part=k_part, num_banks=accel.num_pods)
+    sched = SliceScheduler(
+        num_pods=accel.num_pods,
+        array_rows=arr.rows,
+        pipeline_latency=arr.pipeline_latency,
+        interconnect=interconnect,
+    ).schedule(graph)
+
+    k_bar = (sum(op.k for op in graph.ops) / len(graph.ops)) if graph.ops else arr.rows
+    slice_cyc = _slice_cycles(accel, interconnect, k_bar)
+    total_cycles = sched.num_slices * slice_cyc
+    total_macs = graph.total_macs
+    util = total_macs / (accel.num_pods * arr.num_pe * total_cycles) if total_cycles else 0.0
+    energy, power = _energy(accel, graph, interconnect, total_cycles)
+    return SimResult(
+        name=name,
+        total_macs=total_macs,
+        total_cycles=int(total_cycles),
+        num_pods=accel.num_pods,
+        utilization=util,
+        busy_pods=sched.pods_busy_fraction(),
+        cycles_per_tile=slice_cyc,
+        effective_tops_at_tdp=accel.peak_ops_at_tdp * util / 1e12,
+        peak_tops_at_tdp=accel.peak_ops_at_tdp / 1e12,
+        energy_joules=energy,
+        avg_power_watts=power,
+        num_tile_ops=len(graph.ops),
+        num_slices=sched.num_slices,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytical wave model (fast path for the Fig-5 DSE sweeps)
+# ---------------------------------------------------------------------------
+
+# relative pod-availability per fabric (Table 1 busy-pods, normalized to the
+# full-permutation fabrics); only Butterfly-1's limited combinatorial power
+# costs throughput.
+_ICN_EFFICIENCY = {
+    "butterfly-1": 66.81 / 72.41,
+    "butterfly-2": 1.0, "butterfly-4": 1.0, "butterfly-8": 1.0,
+    "crossbar": 1.0, "benes": 1.0, "mesh": 0.55, "htree": 0.45,
+}
+
+
+def _levels(gemms: list[GemmSpec]) -> list[list[GemmSpec]]:
+    """Group layers into topological levels (parallel branches share one)."""
+    depth: dict[int, int] = {}
+    by_id = {g.gemm_id: g for g in gemms}
+    order = sorted(gemms, key=lambda g: g.gemm_id)
+    for g in order:
+        d = 0
+        for pid in g.depends_on:
+            if pid in depth:
+                d = max(d, depth[pid] + 1)
+        depth[g.gemm_id] = d
+    lv: dict[int, list[GemmSpec]] = defaultdict(list)
+    for g in order:
+        lv[depth[g.gemm_id]].append(g)
+    return [lv[i] for i in sorted(lv)]
+
+
+def analyze(
+    gemms: list[GemmSpec],
+    accel: AcceleratorConfig,
+    interconnect: str = "butterfly-2",
+    k_part: int | None = None,
+    name: str = "",
+) -> SimResult:
+    """Closed-form wave model of the tiled schedule.
+
+    Per level: every GEMM contributes ceil(d1/k)*ceil(d3/c) independent
+    psum chains of length ceil(d2/r). Chains from all GEMMs of the level
+    run concurrently in waves of `pods` (scaled by the fabric's busy-pod
+    efficiency); the level cannot finish faster than its longest chain.
+    """
+    arr = accel.array
+    r, c = arr.rows, arr.cols
+    kp = k_part if k_part is not None else r
+    eff_pods = accel.num_pods * _ICN_EFFICIENCY.get(interconnect, 1.0)
+
+    total_macs = 0
+    total_slices = 0.0
+    total_tiles = 0
+    k_sum = 0.0
+    for level in _levels(gemms):
+        pod_slices = 0.0
+        crit = 0.0
+        for g in level:
+            kpg = max(1, min(kp, g.d1))
+            n_i = math.ceil(g.d1 / kpg)
+            n_j = math.ceil(g.d2 / r)
+            n_l = math.ceil(g.d3 / c)
+            pod_slices += n_i * n_j * n_l
+            crit = max(crit, n_j)
+            total_macs += g.macs
+            total_tiles += n_i * n_j * n_l
+            k_sum += n_i * n_j * n_l * (g.d1 / n_i)
+        total_slices += max(crit, pod_slices / eff_pods)
+
+    k_bar = (k_sum / total_tiles) if total_tiles else r
+    slice_cyc = _slice_cycles(accel, interconnect, k_bar)
+    total_cycles = total_slices * slice_cyc
+    util = total_macs / (accel.num_pods * arr.num_pe * total_cycles) if total_cycles else 0.0
+    busy = total_tiles / (total_slices * accel.num_pods) if total_slices else 0.0
+
+    # energy: same accounting as the slice-accurate path without scheduling
+    spec = icn_spec_for(interconnect, max(2, accel.num_pods))
+    e_pj = 0.0
+    for g in gemms:
+        kpg = max(1, min(kp, g.d1))
+        n_j = math.ceil(g.d2 / r)
+        e_pj += g.macs * E_MAC_PJ
+        e_pj += g.d1 * g.d2 * ACT_BYTES * (E_SRAM_PJ_PER_BYTE + spec.mw_per_byte)
+        e_pj += g.d2 * g.d3 * WEIGHT_BYTES * (E_SRAM_PJ_PER_BYTE + spec.mw_per_byte)
+        e_pj += g.d1 * g.d3 * PSUM_BYTES * (2 * n_j - 1) * (
+            E_SRAM_PJ_PER_BYTE + spec.mw_per_byte)
+    energy = e_pj * 1e-12
+    t = total_cycles / arr.clock_hz if total_cycles else 0.0
+    power = energy / t if t > 0 else 0.0
+
+    return SimResult(
+        name=name,
+        total_macs=total_macs,
+        total_cycles=int(total_cycles),
+        num_pods=accel.num_pods,
+        utilization=util,
+        busy_pods=min(1.0, busy),
+        cycles_per_tile=slice_cyc,
+        effective_tops_at_tdp=accel.peak_ops_at_tdp * util / 1e12,
+        peak_tops_at_tdp=accel.peak_ops_at_tdp / 1e12,
+        energy_joules=energy,
+        avg_power_watts=power,
+        num_tile_ops=total_tiles,
+        num_slices=int(total_slices),
+    )
+
+
+def merge_workloads(*workloads: list[GemmSpec]) -> list[GemmSpec]:
+    """Multi-tenancy (§6.1): co-schedule independent workloads. GEMM ids are
+    re-based so streams stay dependency-disjoint and interleave freely."""
+    merged: list[GemmSpec] = []
+    base = 0
+    for wl in workloads:
+        for g in wl:
+            merged.append(GemmSpec(
+                d1=g.d1, d2=g.d2, d3=g.d3,
+                gemm_id=g.gemm_id + base,
+                depends_on=tuple(d + base for d in g.depends_on),
+                name=g.name,
+            ))
+        base += (max((g.gemm_id for g in wl), default=0) + 1)
+    return merged

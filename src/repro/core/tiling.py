@@ -1,0 +1,206 @@
+"""SOSA data tiling (§3.3): GEMM -> tile-operation DAG.
+
+A GEMM  X (d1 x d2) @ W (d2 x d3) (+ P_in)  on weight-stationary r x c pods
+is partitioned as:
+
+  * W into (r x c) tiles  — forced by the spatial layout,
+  * X's second dim into r — forced by the contraction,
+  * X's first dim into chunks of `k_part` — the paper's free parameter.
+
+The paper's contribution is k_part = r: the smallest partition that does not
+expose the r-cycle weight-buffering time (double buffering), maximizing the
+number of *independent* tile ops:  n_parallel = ceil(d1/r) * ceil(d3/c).
+Tiles along d2 (the contraction) form read-after-write chains through the
+partial-sum input (or pairwise aggregation on post-processors, §4.2).
+
+`tile_gemm` returns a TileOpGraph whose ops carry everything the scheduler
+(core/scheduler.py), the simulator (core/simulator.py) and the numerical
+executor (core/executor.py) need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+from .arrays import ArrayConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TileOp:
+    """One (k x r') @ (r' x c') multiply-accumulate tile operation."""
+
+    op_id: int
+    gemm_id: int
+    # tile indices within the GEMM: X row-chunk i, contraction chunk j,
+    # W column-chunk l (paper Fig 8: x_ij @ w_jl (+ y_i,j-1,l) -> y_ijl).
+    i: int
+    j: int
+    l: int
+    # effective (edge-clipped) tile dims
+    k: int       # rows of the X chunk streamed through the array
+    r_eff: int   # contraction size  (<= array rows)
+    c_eff: int   # output columns    (<= array cols)
+    depends_on: tuple[int, ...] = ()   # op_ids (RAW: psum chain, inter-GEMM)
+    # memory placement (bank ids are assigned by the tiler round-robin —
+    # the paper stores X/W/P tiles in dedicated bank groups, Fig 7)
+    x_bank: int = 0
+    w_bank: int = 0
+    p_bank: int = 0
+    is_aggregation: bool = False  # post-processor pair-aggregation op
+
+    @property
+    def macs(self) -> int:
+        return self.k * self.r_eff * self.c_eff
+
+
+@dataclasses.dataclass
+class GemmSpec:
+    """A GEMM extracted from a DNN layer (after conv-to-GEMM conversion)."""
+
+    d1: int                     # filter reuse   (X rows)
+    d2: int                     # features       (contraction)
+    d3: int                     # filters        (W cols)
+    gemm_id: int = 0
+    depends_on: tuple[int, ...] = ()   # gemm_ids of producer layers
+    name: str = ""
+
+    @property
+    def macs(self) -> int:
+        return self.d1 * self.d2 * self.d3
+
+
+@dataclasses.dataclass
+class TileOpGraph:
+    ops: list[TileOp]
+    num_banks: int
+    # per-GEMM output tile ids: (gemm_id, i, l) -> op_id producing the final
+    # accumulated output tile (end of the psum chain)
+    final_tiles: dict[tuple[int, int, int], int]
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    @property
+    def total_macs(self) -> int:
+        return sum(op.macs for op in self.ops)
+
+    def parallel_frontier(self) -> int:
+        """Number of ops with no intra-graph dependencies (available at t=0)."""
+        return sum(1 for op in self.ops if not op.depends_on)
+
+
+def _chunks(total: int, size: int) -> list[int]:
+    """Chunk sizes covering `total` in steps of `size` (last may be short)."""
+    if total <= 0:
+        return []
+    n = math.ceil(total / size)
+    out = [size] * n
+    out[-1] = total - size * (n - 1)
+    return out
+
+
+def tile_gemm(
+    gemm: GemmSpec,
+    array: ArrayConfig,
+    k_part: int | None = None,
+    num_banks: int = 256,
+    start_op_id: int = 0,
+    producer_final: dict[tuple[int, int, int], int] | None = None,
+    producer_gemms: tuple[int, ...] = (),
+    producer_all_ops: tuple[int, ...] = (),
+) -> TileOpGraph:
+    """Tile one GEMM into TileOps (k_part=None -> the paper's r x r rule).
+
+    producer_all_ops: op_ids this GEMM's first-wave tiles must wait for
+    (coarse inter-layer dependency — the paper schedules layer by layer with
+    RAW dependencies between them).
+    """
+    r, c = array.rows, array.cols
+    if k_part is None:
+        k_part = r                       # the paper's optimal partition
+    k_part = max(1, min(k_part, gemm.d1))
+
+    k_chunks = _chunks(gemm.d1, k_part)
+    r_chunks = _chunks(gemm.d2, r)
+    c_chunks = _chunks(gemm.d3, c)
+
+    ops: list[TileOp] = []
+    final: dict[tuple[int, int, int], int] = {}
+    oid = start_op_id
+
+    # Bank placement: X tiles keyed by (i, j), W by (j, l), P by (i, l);
+    # spread round-robin over banks (single-ported, one reader per slice).
+    def xb(i: int, j: int) -> int:
+        return (i * len(r_chunks) + j) % num_banks
+
+    def wb(j: int, l: int) -> int:
+        return (gemm.gemm_id * 7 + j * len(c_chunks) + l) % num_banks
+
+    def pb(i: int, l: int) -> int:
+        return (gemm.gemm_id * 13 + i * len(c_chunks) + l) % num_banks
+
+    for i, k in enumerate(k_chunks):
+        for l, c_eff in enumerate(c_chunks):
+            prev: int | None = None
+            for j, r_eff in enumerate(r_chunks):
+                deps: list[int] = []
+                if prev is not None:
+                    deps.append(prev)          # psum chain along contraction
+                if j == 0 and producer_all_ops:
+                    deps.extend(producer_all_ops)
+                ops.append(
+                    TileOp(
+                        op_id=oid, gemm_id=gemm.gemm_id,
+                        i=i, j=j, l=l, k=k, r_eff=r_eff, c_eff=c_eff,
+                        depends_on=tuple(deps),
+                        x_bank=xb(i, j), w_bank=wb(j, l), p_bank=pb(i, l),
+                    )
+                )
+                prev = oid
+                oid += 1
+            final[(gemm.gemm_id, i, l)] = prev  # last op in the chain
+    return TileOpGraph(ops=ops, num_banks=num_banks, final_tiles=final)
+
+
+def tile_workload(
+    gemms: list[GemmSpec],
+    array: ArrayConfig,
+    k_part: int | None = None,
+    num_banks: int = 256,
+    layer_dependencies: bool = True,
+) -> TileOpGraph:
+    """Tile a whole workload (list of GEMM layers, in execution order).
+
+    When `layer_dependencies` is True, a layer's tiles depend on *all* tiles
+    of the layers named in its `depends_on` (coarse RAW through activations;
+    matches the paper's layer-by-layer scheduling). Tiles of layers with no
+    producer/consumer relation (e.g. parallel branches, multi-tenant
+    workloads) remain independent and interleave freely — the source of the
+    paper's multi-tenancy gain (§6.1, Fig 11).
+    """
+    all_ops: list[TileOp] = []
+    final: dict[tuple[int, int, int], int] = {}
+    last_ops_of_gemm: dict[int, tuple[int, ...]] = {}
+    oid = 0
+    for gemm in gemms:
+        producers: tuple[int, ...] = ()
+        if layer_dependencies and gemm.depends_on:
+            prod: list[int] = []
+            for gid in gemm.depends_on:
+                prod.extend(last_ops_of_gemm.get(gid, ()))
+            producers = tuple(prod)
+        g = tile_gemm(
+            gemm, array, k_part=k_part, num_banks=num_banks,
+            start_op_id=oid, producer_all_ops=producers,
+        )
+        all_ops.extend(g.ops)
+        final.update(g.final_tiles)
+        # consumers only need the *final* (fully accumulated) tiles
+        last_ops_of_gemm[gemm.gemm_id] = tuple(
+            opid for (gid, _, _), opid in g.final_tiles.items()
+            if gid == gemm.gemm_id
+        )
+        oid += len(g.ops)
+    return TileOpGraph(ops=all_ops, num_banks=num_banks, final_tiles=final)

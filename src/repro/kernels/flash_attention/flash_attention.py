@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: blocked flash attention (GQA, causal, sliding window).
+
+Grid (B, Hq, nq, nk), K-blocks minor: TPU executes the grid sequentially
+minor-to-major, so f32 scratch (acc, m, l) carries the online softmax state
+across K blocks of one Q block — the same psum-carrying pattern as the
+systolic GEMM (and the paper's psum chaining, DESIGN.md §2).
+
+Block sizes (bq x bk) are the attention-level output of the SOSA
+granularity analysis: defaults 512x512 keep q/k/v/acc blocks ~0.75 MiB in
+VMEM (bf16) — comfortably triple-bufferable — with MXU-aligned lane dims.
+
+GQA is expressed in the index maps: K/V blocks are fetched for head
+h // (Hq // Hkv); no repeat/materialization of KV heads ever happens.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  n_k: int, bq: int, bk: int, causal: bool,
+                  window: int | None, scale: float, kv_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :] * scale                    # [bq, D]
+    k = k_ref[0, :, 0, :]                            # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = k_pos < kv_len
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0, :, 0, :],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,                  # [B, Sq, Hq, D]
+    k: jax.Array,                  # [B, Skv, Hkv, D]
+    v: jax.Array,                  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    kv_len: int | None = None,     # unpadded KV length (mask tail)
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "ops.py pads to block multiples"
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    n_k = Skv // bk
+    grid = (B, Hq, Sq // bq, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, n_k=n_k, bq=bq, bk=bk, causal=causal, window=window,
+        scale=scale, kv_len=kv_len if kv_len is not None else Skv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik, g=g: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, iq, ik, g=g: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for flash attention (shared with models/attention)."""
+
+from __future__ import annotations
+
+from repro.models.attention import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None,
+                        softmax_scale=None, kv_len=None):
+    return naive_attention(q, k, v, causal=causal, window=window,
+                           softmax_scale=softmax_scale, kv_valid_len=kv_len)

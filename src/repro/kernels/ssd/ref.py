@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the SSD chunk kernel (models/ssm.ssd_reference)."""
+
+from __future__ import annotations
+
+from repro.models.ssm import ssd_reference
+
+
+def ssd_ref(x, dt, A, B, C, D, *, chunk: int = 128):
+    """Same contract as ops.ssd: B, C given per-head [b,S,H,N]."""
+    # ssd_reference takes grouped B/C [b,S,G,N]; per-head input is G == H.
+    return ssd_reference(x, dt, A, B, C, D, chunk)

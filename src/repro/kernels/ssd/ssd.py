@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan.
+
+State-space duality makes the SSM computable as chunked GEMMs — exactly
+the regime the paper's tiling targets (DESIGN.md §4): per (batch, head)
+the sequence is cut into chunks of C tokens; within a chunk the output is
+two small matmuls ([C,N]x[N,C] scores and [C,C]x[C,P] values), and a
+[P,N] state carries across chunks through VMEM scratch (grid minor dim is
+the chunk index — the same sequential-accumulator pattern as the systolic
+GEMM kernel).
+
+Tile shapes: C=chunk (default 128..256), N=d_state (128), P=head_dim (64)
+— all MXU-friendly. The f32 state scratch is 32-128 KB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref,
+                *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :]                         # [C, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # [C]
+    A = a_ref[0].astype(jnp.float32)              # scalar (negative)
+    B = b_ref[0, :, 0, :]                         # [C, N]
+    C = c_ref[0, :, 0, :]                         # [C, N]
+    D = d_ref[0].astype(jnp.float32)              # scalar
+
+    dA = dt * A                                   # [C]
+    cum = jnp.cumsum(dA)                          # [C]
+    # intra-chunk: M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s <= t
+    seg = cum[:, None] - cum[None, :]             # [C, C]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    M = scores * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        M.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # [C, P]
+
+    # inter-chunk: y += exp(cum_t) * C_t . h_prev^T   (h [P, N])
+    h_prev = h_ref[...]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C.astype(jnp.float32), h_prev.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: h <- exp(cum_end) * h + sum_s exp(cum_end - cum_s) dt_s x_s B_s^T
+    w = (jnp.exp(cum[-1] - cum) * dt)             # [C]
+    h_new = jnp.exp(cum[-1]) * h_prev + jax.lax.dot_general(
+        (x.astype(jnp.float32) * w[:, None]), B.astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_ref[...] = h_new.astype(h_ref.dtype)
+
+    y_ref[0, :, 0, :] = (y + D * x.astype(jnp.float32)).astype(y_ref.dtype)
+
+
+def ssd_pallas(x, dt, A, B, C, D, *, chunk: int = 128,
+               interpret: bool = False):
+    """x [b,S,H,P]; dt [b,S,H]; A,D [H]; B,C [b,S,H,N] (groups pre-broadcast
+    by ops.py). Returns y [b,S,H,P]. S must be a chunk multiple (ops pads).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    grid = (b, H, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, h, c: (i, c, h)),
+            pl.BlockSpec((1,), lambda i, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1,), lambda i, h, c: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda i, h, c: (i, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)

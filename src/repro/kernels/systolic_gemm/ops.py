@@ -1,0 +1,64 @@
+"""jit'd public wrapper for the systolic GEMM kernel: pads to block
+multiples, dispatches to Pallas (interpret=True on CPU), slices back."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .systolic_gemm import systolic_gemm_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
+def systolic_gemm(x, w, scale=None, bias=None, *, activation=None,
+                  block_m: int = 256, block_n: int = 256, block_k: int = 256,
+                  out_dtype=jnp.float32, interpret: bool | None = None):
+    """out = epilogue((x @ w) * scale + bias). x [M,K], w [K,N].
+
+    int8 x int8 -> int32 accumulate; bf16/f32 -> f32 accumulate.
+    The fused epilogue is the paper's SIMD post-processor (DESIGN.md §2).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = (min(block_m, _rup(M)), min(block_n, _rup(N)),
+                  min(block_k, _rup(K)))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    if scale is None:
+        scale = jnp.ones((N,), jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    sp = _pad_to(scale, bn, 0)
+    bp = _pad_to(bias, bn, 0)
+    out = systolic_gemm_pallas(
+        xp, wp, sp, bp, block_m=bm, block_n=bn, block_k=bk,
+        activation=activation, out_dtype=out_dtype, interpret=interpret)
+    return out[:M, :N]
+
+
+def _rup(n: int, m: int = 8) -> int:
+    """Round up to a multiple of the TPU sublane count."""
+    return max(m, ((n + m - 1) // m) * m)

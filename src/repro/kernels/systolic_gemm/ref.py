@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the systolic GEMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def systolic_gemm_ref(x, w, scale=None, bias=None, *, activation=None,
+                      out_dtype=jnp.float32):
+    if x.dtype == jnp.int8:
+        acc = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+    else:
+        acc = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if scale is not None:
+        acc = acc * scale.astype(jnp.float32)[None, :]
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    elif activation == "relu2":
+        acc = jnp.square(jnp.maximum(acc, 0.0))
+    return acc.astype(out_dtype)

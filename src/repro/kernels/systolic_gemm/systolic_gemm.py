@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: weight-stationary tiled GEMM — the SOSA pod.
+
+TPU-native adaptation of the paper's systolic pod (DESIGN.md §2):
+
+  * the (bm x bk x bn) VMEM block is the "pod array": weights stay resident
+    in VMEM across the K-walk (weight-stationary), activations stream
+    through, int32 partial sums accumulate in a VMEM scratch — the TPU
+    analogue of the paper's psum-through-the-column flow;
+  * the grid is ordered K-minor so the accumulator scratch carries partial
+    sums across K steps exactly like the paper's psum chaining (§4.2);
+  * the paper's SIMD post-processor (Fig 7) becomes the fused epilogue:
+    dequant scale + bias + activation run in-kernel on the final K step,
+    saving one full HBM round-trip of the output;
+  * dtypes follow §5: int8 activations x int8 weights -> int32 accumulate
+    (TPU MXU has no int16 accumulator; strictly wider than the paper's
+    int16 psums) with an f32 dequant epilogue. A bf16 x bf16 -> f32 path
+    serves the training stack.
+
+Block shapes are the kernel-level output of the SOSA granularity DSE: lane
+dims must be multiples of 128 (MXU), sublane multiples of 8/32; defaults
+(256, 256, 256) keep the three-buffer working set < 1 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+                 n_k: int, activation: str | None, out_dtype):
+    """One (i, j, k) grid step: acc += x_blk @ w_blk; epilogue at k == last."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    if x.dtype == jnp.int8:
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        acc = acc * scale_ref[...].astype(jnp.float32)   # dequant (per-col)
+        acc = acc + bias_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "gelu":
+            acc = jax.nn.gelu(acc)
+        elif activation == "silu":
+            acc = acc * jax.nn.sigmoid(acc)
+        elif activation == "relu2":
+            acc = jnp.square(jnp.maximum(acc, 0.0))
+        o_ref[...] = acc.astype(out_dtype)
+
+
+def systolic_gemm_pallas(
+    x: jax.Array,                  # [M, K] int8 | bf16
+    w: jax.Array,                  # [K, N] int8 | bf16
+    scale: jax.Array,              # [N] f32 dequant scale (ones if None)
+    bias: jax.Array,               # [N] f32
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    activation: str | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "caller (ops.py) pads to block multiples")
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+
+    kernel = functools.partial(
+        _gemm_kernel, n_k=n_k, activation=activation, out_dtype=out_dtype)
+    acc_dtype = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[
+            # int32/f32 accumulator = the pod's psum registers
+            pltpu.VMEM((block_m, block_n), acc_dtype),
+        ],
+        interpret=interpret,
+    )(x, w, scale.reshape(1, N), bias.reshape(1, N))

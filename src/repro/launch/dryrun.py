@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x applicable shape x mesh) cell:
+    jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)
+        -> .compile() -> memory_analysis() + cost_analysis() + HLO text
+No arrays are ever materialized (pure AOT on placeholder devices).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Results land in reports/dryrun/<mesh>/<arch>__<shape>.json, which
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks read.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_arch, list_archs
+from repro.models.model import Model
+from repro.parallel.sharding import (batch_axes, cache_pspecs,
+                                     fsdp_pspecs_from_schema, make_constrain,
+                                     pspecs_from_schema, zero1_pspec)
+from repro.roofline.analysis import (HBM_PER_CHIP, collective_bytes_from_hlo,
+                                     from_compiled, model_flops)
+from repro.train.optimizer import AdamWConfig, AdamWState
+from repro.train.train_step import TrainConfig, grads_fn
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def kv_replication(cfg, mesh) -> int:
+    """Virtual-KV factor so decode caches shard over the model axis."""
+    m = mesh.shape.get("model", 1)
+    kv = max(1, cfg.n_kv_heads)
+    if cfg.mla is not None or cfg.family == "ssm":
+        return 1
+    if kv < m and m % kv == 0 and cfg.n_heads % m == 0:
+        return m // kv
+    return 1
+
+
+def input_specs(arch: str, shape_name: str, mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (public
+    entry used by the dry-run and the benchmarks; no allocation)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((B, S if not shape.is_decode else 1), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((B, S), jnp.int32)
+    if cfg.encoder_decoder and not shape.is_decode:
+        specs["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and not shape.is_decode:
+        specs["image_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    return specs
+
+
+def _microbatches(arch: str, shape_name: str) -> int:
+    """Grad-accum for the big train cells (activation fit; §Perf logs)."""
+    if shape_name != "train_4k":
+        return 1
+    return {"nemotron-4-340b": 4, "llama-3.2-vision-90b": 2,
+            "deepseek-v2-236b": 2, "dbrx-132b": 2}.get(arch, 1)
+
+
+def calibration_cfgs(cfg):
+    """Two reduced-DEPTH (same width!) variants whose scanned segments hold
+    1 vs 2 layers, plus the per-layer extrapolation count.
+
+    XLA's cost analysis counts a while (scan) body once regardless of trip
+    count, so scanned compiles under-report FLOPs / bytes / collectives.
+    Every scanned layer is identical by construction, so
+        total(L) = f(1) + (f(2) - f(1)) * extra
+    with f() measured on small *unrolled* compiles under the same mesh and
+    shardings is exact for dots (validated in tests/test_roofline.py).
+    """
+    import dataclasses as dc
+    fam = cfg.family
+    if fam == "vlm":
+        g = cfg.cross_attn_every
+        return (dc.replace(cfg, n_layers=g), dc.replace(cfg, n_layers=2 * g),
+                cfg.n_layers // g - 1)
+    if fam == "hybrid":
+        c1 = dc.replace(cfg, n_layers=2, global_attn_layers=(0,))
+        c2 = dc.replace(cfg, n_layers=3, global_attn_layers=(0,))
+        # globals cost ~= SWA layers (masking is free); 1 global is in f;
+        # remaining layers (incl. the other globals) extrapolate as SWA.
+        return c1, c2, cfg.n_layers - 2
+    if cfg.moe and cfg.moe.first_dense_layers:
+        fd = cfg.moe.first_dense_layers
+        return (dc.replace(cfg, n_layers=fd + 1),
+                dc.replace(cfg, n_layers=fd + 2),
+                cfg.n_layers - fd - 1)
+    if cfg.encoder_decoder:
+        return (dc.replace(cfg, n_layers=1, n_encoder_layers=1),
+                dc.replace(cfg, n_layers=2, n_encoder_layers=2),
+                cfg.n_layers - 1)
+    return (dc.replace(cfg, n_layers=1), dc.replace(cfg, n_layers=2),
+            cfg.n_layers - 1)
+
+
+def build_cell(arch: str, shape_name: str, mesh, seq_shard: bool = True,
+               include_optimizer: bool = True, cfg_override=None,
+               unroll: bool = False, microbatches: int | None = None,
+               opts: dict | None = None):
+    """Returns (fn, args_sds, in_shardings, donate) ready to lower.
+
+    opts — §Perf hillclimb knobs:
+      moe_dispatch: "onehot"|"sort"      (MoE data-movement strategy)
+      mla_seq_shard: bool                (latent-cache sequence sharding)
+      kv_block: int                      (chunked-attention block size)
+      no_seq_shard / no_fsdp: bool
+    """
+    import dataclasses as dc
+    opts = opts or {}
+    cfg = cfg_override if cfg_override is not None else get_arch(arch)
+    if opts.get("moe_dispatch") and cfg.moe:
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe,
+                                             dispatch=opts["moe_dispatch"]))
+    if opts.get("moe_group_size") and cfg.moe:
+        cfg = dc.replace(cfg, moe=dc.replace(
+            cfg.moe, group_size=opts["moe_group_size"]))
+    if opts.get("router_bf16") and cfg.moe:
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe,
+                                             router_dtype="bfloat16"))
+    shape = SHAPES[shape_name]
+    kv_rep = kv_replication(cfg, mesh) if shape.is_decode else 1
+    attn_sp = opts.get("attn_seq_parallel", False)
+    use_sp = (seq_shard and shape.kind == "train") or \
+        (attn_sp and not shape.is_decode)
+    constrain = make_constrain(mesh, cfg.vocab, seq_shard=use_sp)
+    model = Model(cfg, kv_rep=kv_rep, constrain=constrain, unroll=unroll,
+                  remat=shape.kind == "train",
+                  kv_block=opts.get("kv_block", 1024))
+
+    sch = model.schema()
+    # FSDP (params dp-sharded, per-layer gather/reduce-scatter) for every
+    # train cell and for serving cells whose TP-sharded weights would not
+    # fit HBM alongside the KV cache.
+    from repro.models.layers import param_count
+    from repro.parallel.sharding import ATTN_SP_RULES
+    rules = ATTN_SP_RULES if attn_sp else None
+    tp = mesh.shape.get("model", 1)
+    params_gb_tp = param_count(sch) * 2 / tp / 2 ** 30
+    use_fsdp = shape.kind == "train" or params_gb_tp > 8.0
+    p_specs = (fsdp_pspecs_from_schema(sch, mesh, rules) if use_fsdp
+               else pspecs_from_schema(sch, mesh, rules))
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    params_sds = model.shapes()
+
+    dp = batch_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    batch_specs = input_specs(arch, shape_name, mesh)
+    b_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*((dpa,) + (None,) * (len(s.shape) - 1)))),
+        batch_specs)
+
+    if shape.kind == "train":
+        ub = microbatches if microbatches is not None else \
+            _microbatches(arch, shape_name)
+        ocfg = AdamWConfig(
+            moment_dtype="bfloat16" if opts.get("opt_bf16") else "float32")
+        tcfg = TrainConfig(microbatches=ub, optimizer=ocfg)
+        gf = grads_fn(model, tcfg)
+        if include_optimizer:
+            from repro.train.optimizer import adamw_update
+
+            def step(params, opt_state, batch):
+                loss, grads = gf(params, batch)
+                new_params, new_opt, om = adamw_update(
+                    tcfg.optimizer, opt_state, grads)
+                return new_params, new_opt, {"loss": loss, **om}
+
+            # ZeRO-1: master/m/v sharded over DP axes on top of TP
+            def z1(sds_tree):
+                return jax.tree.map(
+                    lambda sds, ps: NamedSharding(
+                        mesh, zero1_pspec(ps, sds.shape, mesh)),
+                    sds_tree, p_specs)
+            mdt = jnp.bfloat16 if opts.get("opt_bf16") else jnp.float32
+            cast = lambda t, dt: jax.tree.map(
+                lambda s: _sds(s.shape, dt), t)
+            f32p = cast(params_sds, jnp.float32)
+            mom = cast(params_sds, mdt)
+            opt_sds = AdamWState(_sds((), jnp.int32), f32p, mom, mom)
+            opt_shard = AdamWState(
+                NamedSharding(mesh, P()), z1(f32p), z1(mom), z1(mom))
+            return (step, (params_sds, opt_sds, batch_specs),
+                    (p_shard, opt_shard, b_shard), (0, 1))
+
+        def step(params, batch):
+            return gf(params, batch)
+        return step, (params_sds, batch_specs), (p_shard, b_shard), ()
+
+    # serving cells
+    max_len = shape.seq_len
+    src_len = shape.seq_len if cfg.encoder_decoder else cfg.n_image_tokens
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, max_len,
+                                 src_len=src_len))
+    c_specs = cache_pspecs(cache_sds, mesh,
+                           mla_seq_shard=opts.get("mla_seq_shard", False),
+                           kv_seq_shard=opts.get("kv_seq_shard", False))
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+
+    if shape.kind == "prefill":
+        def step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+        return (step, (params_sds, batch_specs, cache_sds),
+                (p_shard, b_shard, c_shard), (2,))
+
+    # decode / long_decode: one token against a filled cache
+    tok_sds = _sds((shape.global_batch,), jnp.int32)
+    tok_shard = NamedSharding(mesh, P(dpa if shape.global_batch > 1 else None))
+    pos_sds = _sds((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+
+    def step(params, tokens, cache, position):
+        return model.decode_step(params, tokens, cache, position)
+    return (step, (params_sds, tok_sds, cache_sds, pos_sds),
+            (p_shard, tok_shard, c_shard, pos_shard), (2,))
+
+
+def _compile_cell(arch, shape_name, mesh, **kw):
+    fn, args, shardings, donate = build_cell(arch, shape_name, mesh, **kw)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        return lowered.compile()
+
+
+def _terms(compiled, chips, name="", kinds: dict | None = None):
+    rl = from_compiled(name, compiled, chips)
+    if kinds is not None and rl.collective_by_kind:
+        for k, v in rl.collective_by_kind.items():
+            kinds[k] = kinds.get(k, 0) + v
+    return (rl.flops_per_device, rl.bytes_per_device,
+            rl.collective_bytes_per_device)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             seq_shard: bool = True, save: bool = True,
+             include_optimizer: bool = True, tag: str = "",
+             calibrate: bool = True, opts: dict | None = None) -> dict:
+    """One dry-run cell: full scanned compile (memory fit, HLO) + L1/L2
+    unrolled calibration compiles (exact FLOP/byte/collective totals —
+    cost analysis counts scan bodies once, see calibration_cfgs)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "chips": chips, "status": "ok", "opts": opts or {}}
+    try:
+        compiled = _compile_cell(
+            arch, shape_name, mesh, seq_shard=seq_shard,
+            include_optimizer=include_optimizer, opts=opts)
+        mem = compiled.memory_analysis()
+        f_raw, b_raw, c_raw = _terms(compiled, chips)
+        result.update({"flops_per_device_scanned": f_raw,
+                       "bytes_per_device_scanned": b_raw,
+                       "collective_bytes_per_device_scanned": c_raw})
+        del compiled
+
+        if calibrate:
+            c1, c2, extra = calibration_cfgs(cfg)
+            ckw = dict(seq_shard=seq_shard,
+                       include_optimizer=include_optimizer,
+                       unroll=True, microbatches=1, opts=opts)
+            k1: dict = {}
+            k2: dict = {}
+            f1 = _terms(_compile_cell(arch, shape_name, mesh,
+                                      cfg_override=c1, **ckw), chips,
+                        kinds=k1)
+            f2 = _terms(_compile_cell(arch, shape_name, mesh,
+                                      cfg_override=c2, **ckw), chips,
+                        kinds=k2)
+            # per-layer deltas clamped >= 0: XLA occasionally CSEs an
+            # all-gather in the deeper variant, which would extrapolate
+            # to a (meaningless) negative total
+            flops, nbytes, coll = (a + max(0.0, b - a) * extra
+                                   for a, b in zip(f1, f2))
+            result["calibration"] = {
+                "l1": f1, "l2": f2, "extra_layers": extra}
+            result["collective_by_kind_per_device"] = {
+                k: k1.get(k, 0) + (k2.get(k, 0) - k1.get(k, 0)) * extra
+                for k in set(k1) | set(k2)}
+        else:
+            flops, nbytes, coll = f_raw, b_raw, c_raw
+
+        from repro.roofline.analysis import Roofline
+        rl = Roofline(name=f"{arch}__{shape_name}", chips=chips,
+                      flops_per_device=flops, bytes_per_device=nbytes,
+                      collective_bytes_per_device=coll)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind in
+                                       ("train", "prefill") else 1)
+        # 6ND convention: N excludes the input-embedding table (a gather,
+        # not matmul flops); the unembedding projection stays counted.
+        n_active = cfg.active_params_estimate() - cfg.vocab * cfg.d_model
+        mf = model_flops(n_active, tokens, train=shape.kind == "train")
+        result.update(rl.to_dict(mf))
+        if mem is not None:
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    result[attr] = int(v)
+            args_b = result.get("argument_size_in_bytes", 0)
+            tmp_b = result.get("temp_size_in_bytes", 0)
+            result["hbm_fit"] = bool((args_b + tmp_b) <= HBM_PER_CHIP)
+            result["hbm_gb_per_chip"] = (args_b + tmp_b) / 2 ** 30
+        result["compile_s"] = round(time.time() - t0, 1)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        result["compile_s"] = round(time.time() - t0, 1)
+    if save:
+        outdir = os.path.join(REPORT_DIR, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        fname = f"{arch}__{shape_name}{tag}.json"
+        with open(os.path.join(outdir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-optimizer", action="store_true")
+    ap.add_argument("--tag", type=str, default="")
+    args = ap.parse_args()
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in applicable_shapes(get_arch(arch)):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for mp in meshes:
+        for arch, shape in cells:
+            r = run_cell(arch, shape, multi_pod=mp,
+                         seq_shard=not args.no_seq_shard,
+                         include_optimizer=not args.no_optimizer,
+                         tag=args.tag)
+            flag = "OK " if r["status"] == "ok" else "ERR"
+            extra = (f"hbm={r.get('hbm_gb_per_chip', 0):.2f}GB "
+                     f"bottleneck={r.get('bottleneck')}"
+                     if r["status"] == "ok" else r.get("error", ""))
+            print(f"[{flag}] {r['mesh']:16s} {arch:22s} {shape:12s} "
+                  f"compile={r['compile_s']:7.1f}s {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax
+import, smoke tests see the real single device.
+
+Mesh axes:
+  pod   — inter-pod (DCN-ish) axis: only DP gradient reduction crosses it,
+          overlapped + int8-compressible (parallel/compression.py)
+  data  — intra-pod data parallel / ZeRO-1 axis
+  model — tensor/expert parallel axis (ICI-local)
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever fits the local host (tests / examples): (data, model)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

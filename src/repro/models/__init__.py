@@ -1,0 +1,10 @@
+"""Model zoo: the 10 assigned architectures via one segment-based API."""
+
+from .model import CrossKV, Model
+from .attention import KVCache, RingKVCache, chunked_attention, naive_attention
+from .ssm import SSMCache, apply_ssm, ssd_reference
+from .transformer import MLACache, Segment, segments
+
+__all__ = ["Model", "CrossKV", "KVCache", "RingKVCache", "MLACache",
+           "SSMCache", "Segment", "segments", "chunked_attention",
+           "naive_attention", "apply_ssm", "ssd_reference"]

@@ -1,0 +1,381 @@
+"""Attention: GQA with chunked (flash-style) softmax, sliding windows,
+decode-with-cache, and DeepSeek-V2 MLA (low-rank latent attention).
+
+The production prefill/train path is `chunked_attention`: a lax.scan over
+KV blocks with an online softmax — O(S) memory, compiles on any backend,
+and is the pure-JAX mirror of kernels/flash_attention (which is the Pallas
+TPU version of the same blocking; the block sizes come from the same SOSA
+granularity analysis, see parallel/autoshard.py).
+
+Shapes: q [B, Sq, Hq, D], k/v [B, Skv, Hkv, D] with Hq = G * Hkv (GQA).
+All masks are computed from positions (never materialized [S, S] tensors).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,Hkv,G,D] x k [B,Skv,Hkv,D] -> [B,Hkv,G,Sq,Skv]."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k)
+
+
+def _gqa_out(p, v):
+    """p [B,Hkv,G,Sq,Skv] x v [B,Skv,Hkv,D] -> [B,Sq,Hkv,G,D]."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """[Sq, Skv] additive bias from position comparisons."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_block: int = 1024,
+    softmax_scale: float | None = None,
+    kv_valid_len=None,
+):
+    """Flash attention with a *flash backward* (custom VJP).
+
+    Autodiff of a scanned online-softmax saves score-sized residuals per
+    KV block — O(S²) f32 bytes, measured as the dominant HBM term on the
+    MLA train cells (EXPERIMENTS §Perf cell 1). The custom VJP saves only
+    (q, k, v, O, rowwise logsumexp) and recomputes scores blockwise in the
+    backward — the defining trick of flash attention, here at the XLA/JAX
+    level so it also shapes the dry-run roofline.
+    """
+    if window is None and kv_valid_len is None and q_offset == 0:
+        return _flash_vjp(q, k, v, causal, kv_block, softmax_scale)
+    return _chunked_attention_fwd_only(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_block=kv_block, softmax_scale=softmax_scale,
+        kv_valid_len=kv_valid_len)
+
+
+def _chunked_attention_fwd_only(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_block: int = 1024,
+    softmax_scale: float | None = None,
+    kv_valid_len=None,
+):
+    """Scanned online-softmax forward (all mask variants; used directly
+    for serving paths and as the recompute body of the custom VJP)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]            # may differ from D (MLA: qk 192, v 128)
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    nb = -(-Skv // kv_block)
+    pad = nb * kv_block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+
+    qg = (q * scale).reshape(B, Sq, Hkv, G, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, blk):
+        acc, m, l, idx = carry
+        kblk, vblk = blk
+        k_pos = idx * kv_block + jnp.arange(kv_block)
+        s = _gqa_scores(qg, kblk).astype(jnp.float32)       # [B,Hkv,G,Sq,kb]
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        if kv_valid_len is not None:
+            bias = bias + jnp.where(k_pos[None, :] < kv_valid_len, 0.0, NEG_INF)
+        if pad:
+            bias = bias + jnp.where(k_pos[None, :] < Skv, 0.0, NEG_INF)
+        s = s + bias
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + _gqa_out(
+            p.astype(q.dtype), vblk).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+        return (acc_new, m_new, l_new, idx + 1), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(step, (acc0, m0, l0, 0), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # [B,Hkv,G,Sq,Dv]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with flash backward (custom VJP)
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_pass(q, k, v, causal, kv_block, softmax_scale):
+    """Forward returning (out, L) with L = rowwise logsumexp [B,Hkv,G,Sq]."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    nb = -(-Skv // kv_block)
+    pad = nb * kv_block - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kb_ = kp.reshape(B, nb, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb_ = vp.reshape(B, nb, kv_block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    qg = (q * scale).reshape(B, Sq, Hkv, G, D)
+    q_pos = jnp.arange(Sq)
+
+    def step(carry, blk):
+        acc, m, l, idx = carry
+        kblk, vblk = blk
+        k_pos = idx * kv_block + jnp.arange(kv_block)
+        s = _gqa_scores(qg, kblk).astype(jnp.float32)
+        ok = k_pos[None, :] < Skv
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + _gqa_out(
+            p.astype(q.dtype), vblk).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+        return (acc_new, m_new, l_new, idx + 1), None
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    (acc, m, l, _), _ = jax.lax.scan(
+        jax.checkpoint(step), (acc0, m0, l0, 0), (kb_, vb_))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(
+        0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv).astype(q.dtype)
+    L = m + jnp.log(jnp.maximum(l, 1e-30))           # [B,Hkv,G,Sq]
+    return out, L
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_vjp(q, k, v, causal, kv_block, softmax_scale):
+    out, _ = _flash_fwd_pass(q, k, v, causal, kv_block, softmax_scale)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, kv_block, softmax_scale):
+    out, L = _flash_fwd_pass(q, k, v, causal, kv_block, softmax_scale)
+    return out, (q, k, v, out, L)
+
+
+def _flash_vjp_bwd(causal, kv_block, softmax_scale, res, dout):
+    """Flash backward: recompute scores blockwise from (q, k, v, L);
+    residuals are O(S·D), never O(S²)."""
+    q, k, v, out, L = res
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    nb = -(-Skv // kv_block)
+    pad = nb * kv_block - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kb_ = kp.reshape(B, nb, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb_ = vp.reshape(B, nb, kv_block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    dog = dout.reshape(B, Sq, Hkv, G, Dv)            # [B,Sq,Hkv,G,Dv]
+    # Delta = rowsum(dO * O)  [B,Hkv,G,Sq]
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq",
+                       dog.astype(jnp.float32),
+                       out.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32))
+    q_pos = jnp.arange(Sq)
+
+    def step(dq_acc, blk):
+        kblk, vblk, idx = blk
+        k_pos = idx * kv_block + jnp.arange(kv_block)
+        s = _gqa_scores(qg, kblk).astype(jnp.float32) * scale
+        ok = k_pos[None, :] < Skv
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(ok, s, NEG_INF)
+        p = jnp.exp(s - L[..., None])                 # [B,Hkv,G,Sq,kb]
+        # dv_j = sum_{q,g} p * dO
+        dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(dout.dtype), dog)
+        # dp = dO . v^T
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog, vblk).astype(jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale      # [B,Hkv,G,Sq,kb]
+        dsq = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", dsq, kblk
+                                     ).astype(jnp.float32)
+        dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", dsq, qg.astype(q.dtype))
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        jax.checkpoint(step), dq0,
+        (kb_, vb_, jnp.arange(nb)))
+    dq = dq.reshape(B, Sq, Hq, D).astype(q.dtype)
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, nb * kv_block, Hkv, D)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, nb * kv_block, Hkv, Dv)
+    if pad:
+        dk, dv = dk[:, :Skv], dv[:, :Skv]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    softmax_scale=None, kv_valid_len=None):
+    """Reference implementation (materializes [Sq, Skv] scores)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, Sq, Hkv, G, D)
+    s = _gqa_scores(qg, k).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    bias = _mask_bias(q_pos, k_pos, causal, window)
+    if kv_valid_len is not None:
+        bias = bias + jnp.where(k_pos[None, :] < kv_valid_len, 0.0, NEG_INF)
+    p = jax.nn.softmax(s + bias, axis=-1).astype(q.dtype)
+    out = _gqa_out(p, v)                                   # [B,Sq,Hkv,G,Dv]
+    return out.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "chunked", **kw):
+    if impl == "chunked":
+        return chunked_attention(q, k, v, **kw)
+    if impl == "naive":
+        kw.pop("kv_block", None)
+        return naive_attention(q, k, v, **kw)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fl
+        kw.pop("kv_block", None)
+        return fl.flash_attention(q, k, v, **kw)
+    raise ValueError(impl)
+
+
+# --------------------------------------------------------------------------
+# KV caches
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCache:
+    """Functional KV cache. `k`/`v`: [..., B, S_max, H, D] (optional leading
+    layer axis when stacked for scan); `length`: [B] filled positions —
+    per-lane, so the serving engine can continuous-batch mixed-length
+    requests in one cache pytree."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array   # [B] int32 (stacked: [L, B])
+
+    @staticmethod
+    def zeros(batch, max_len, n_kv, head_dim, dtype=jnp.bfloat16,
+              layers: int | None = None):
+        shape = (batch, max_len, n_kv, head_dim)
+        lshape: tuple[int, ...] = (batch,)
+        if layers:
+            shape = (layers,) + shape
+            lshape = (layers, batch)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros(lshape, jnp.int32))
+
+    def append(self, k_new, v_new):
+        """Write [B, s, H, D] at per-lane position `length` (no layer axis
+        here — per-layer views are sliced inside the scan body)."""
+        idx = self.length                            # [B]
+        upd = jax.vmap(
+            lambda buf, new, i: jax.lax.dynamic_update_slice_in_dim(
+                buf, new, i, axis=0))
+        k = upd(self.k, k_new, idx)
+        v = upd(self.v, v_new, idx)
+        return KVCache(k, v, idx + k_new.shape[1])
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "length"], meta_fields=[])
+
+
+@dataclasses.dataclass
+class RingKVCache:
+    """Sliding-window ring buffer (window-sized memory for SWA layers)."""
+    k: jax.Array        # [B, W, H, D]
+    v: jax.Array
+    length: jax.Array   # [B] total tokens seen per lane
+
+    @staticmethod
+    def zeros(batch, window, n_kv, head_dim, dtype=jnp.bfloat16):
+        return RingKVCache(
+            jnp.zeros((batch, window, n_kv, head_dim), dtype),
+            jnp.zeros((batch, window, n_kv, head_dim), dtype),
+            jnp.zeros((batch,), jnp.int32))
+
+    @property
+    def window(self) -> int:
+        return self.k.shape[1]
+
+    def append_token(self, k_new, v_new):
+        """k_new [B, 1, H, D] — single decode step, per-lane ring slots."""
+        slot = self.length % self.window             # [B]
+        upd = jax.vmap(
+            lambda buf, new, i: jax.lax.dynamic_update_slice_in_dim(
+                buf, new, i, axis=0))
+        k = upd(self.k, k_new, slot)
+        v = upd(self.v, v_new, slot)
+        return RingKVCache(k, v, self.length + 1)
+
+    def positions(self):
+        """Absolute position stored in each ring slot per lane [B, W]
+        (invalid slots -> -1, masked by callers)."""
+        W = self.window
+        slots = jnp.arange(W)[None, :]
+        newest = (self.length - 1)[:, None]          # [B, 1]
+        newest_slot = newest % W
+        age = (newest_slot - slots) % W
+        pos = newest - age
+        return jnp.where((pos >= 0) & (pos > newest - W), pos, -1)
+
+
+jax.tree_util.register_dataclass(
+    RingKVCache, data_fields=["k", "v", "length"], meta_fields=[])
+
+
+def decode_attention(q, cache_k, cache_v, k_pos, q_pos, *,
+                     softmax_scale=None, window: int | None = None):
+    """Single-token decode vs a cache. q [B,1,Hq,D]; cache [B,S,Hkv,D];
+    k_pos [S] or [B,S] absolute positions (-1 = invalid slot);
+    q_pos scalar or [B] (per-lane continuous batching)."""
+    B, _, Hq, D = q.shape
+    Hkv = cache_k.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, 1, Hkv, G, D)
+    s = _gqa_scores(qg, cache_k).astype(jnp.float32)       # [B,Hkv,G,1,S]
+    k_pos = jnp.broadcast_to(jnp.atleast_2d(k_pos), (B, cache_k.shape[1]))
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos), (B,))[:, None]
+    ok = (k_pos >= 0) & (k_pos <= q_pos)
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = _gqa_out(p, cache_v)                             # [B,1,Hkv,G,Dv]
+    return out.reshape(B, 1, Hq, cache_v.shape[-1]).astype(q.dtype)

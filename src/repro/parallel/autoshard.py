@@ -1,0 +1,149 @@
+"""SOSA-model-driven sharding & blocking decisions.
+
+The paper's three pillars, applied at mesh scale (DESIGN.md §2):
+
+  1. *Granularity*: each TPU chip's MXU is a 128x128 weight-stationary
+     array — a "pod". `choose_blocks` runs the same effective-throughput
+     trade-off as core/dse.py over Pallas block candidates: larger blocks
+     amortize HBM traffic (the paper's memory-energy term), smaller blocks
+     avoid edge waste when layer dims don't divide (the utilization term).
+
+  2. *Tiling*: `plan_report` counts the parallel tiles each sharding plan
+     exposes per device-GEMM — the paper's "#tiles >= #pods" criterion
+     decides how much batch/sequence partitioning a shape needs.
+
+  3. *Interconnect*: plans are scored with the analytical wave model
+     (core/simulator.analyze) on the per-device GEMM trace, so a plan that
+     starves pods (too little partitioning) or thrashes memory (too much)
+     loses — the Fig 12b curve, reproduced at mesh scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core.arrays import ArrayConfig, AcceleratorConfig
+from ..core.simulator import analyze
+from ..core.tiling import GemmSpec
+from ..core.workloads import transformer_lm
+
+MXU = 128  # TPU MXU dimension: the per-chip "pod" granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    name: str
+    dp: int                 # batch ways (pod x data)
+    tp: int                 # model ways
+    microbatches: int = 1   # grad-accum splits (train only)
+    seq_shard: bool = False # sequence-parallel residuals
+
+    def describe(self) -> str:
+        return (f"{self.name}: dp={self.dp} tp={self.tp} "
+                f"ubatch={self.microbatches} sp={self.seq_shard}")
+
+
+def device_gemms(cfg: ArchConfig, shape: ShapeConfig, plan: ShardPlan
+                 ) -> list[GemmSpec]:
+    """The GEMM trace one device executes under a plan (weight GEMMs of
+    one layer stack pass, dims divided by the plan's ways)."""
+    b_local = max(1, shape.global_batch // (plan.dp * plan.microbatches))
+    seq = 1 if shape.is_decode else shape.seq_len
+    heads = max(1, cfg.n_heads)
+    tp_heads = plan.tp if heads % plan.tp == 0 else 1
+    d_ff = cfg.moe.d_ff_expert if cfg.moe else max(1, cfg.d_ff)
+    ff_local = max(1, d_ff // (1 if cfg.moe else plan.tp))
+    return transformer_lm(
+        n_layers=1,
+        d_model=cfg.d_model,
+        n_heads=max(1, heads // tp_heads),
+        d_ff=ff_local,
+        seq=seq,
+        batch=b_local,
+        vocab=0,
+        n_kv_heads=max(1, cfg.n_kv_heads or 1),
+        include_attention=not shape.is_decode,
+    )
+
+
+def tiles_exposed(gemms: list[GemmSpec], block: int = MXU) -> int:
+    """Parallel tile count under the paper's r x r partitioning at MXU
+    granularity — the quantity the tiling pillar maximizes."""
+    total = 0
+    for g in gemms:
+        total += math.ceil(g.d1 / block) * math.ceil(g.d3 / block)
+    return total
+
+
+def candidate_plans(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict
+                    ) -> list[ShardPlan]:
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh_shape.get(ax, 1)
+    tp = mesh_shape.get("model", 1)
+    plans = [ShardPlan("dp-tp", dp, tp)]
+    if shape.kind == "train":
+        plans.append(ShardPlan("dp-tp+sp", dp, tp, seq_shard=True))
+        for ub in (2, 4):
+            if shape.global_batch // dp >= ub:
+                plans.append(ShardPlan(f"dp-tp+ub{ub}", dp, tp,
+                                       microbatches=ub, seq_shard=True))
+    return plans
+
+
+def score_plan(cfg: ArchConfig, shape: ShapeConfig, plan: ShardPlan,
+               chip_pods: int = 1) -> float:
+    """Effective throughput (TOPS @ chip power) of the per-device trace on
+    an MXU-granularity pod model."""
+    gemms = device_gemms(cfg, shape, plan)
+    accel = AcceleratorConfig(
+        array=ArrayConfig(rows=MXU, cols=MXU), num_pods=chip_pods,
+        icn_mw_per_byte=0.0)
+    res = analyze(gemms, accel, interconnect="crossbar")
+    return res.effective_tops_at_tdp * plan.microbatches  # same total work
+
+
+def choose_plan(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict
+                ) -> tuple[ShardPlan, list[tuple[str, float]]]:
+    plans = candidate_plans(cfg, shape, mesh_shape)
+    scored = [(p, score_plan(cfg, shape, p)) for p in plans]
+    scored.sort(key=lambda t: -t[1])
+    return scored[0][0], [(p.describe(), s) for p, s in scored]
+
+
+def choose_blocks(m: int, k: int, n: int,
+                  candidates=(128, 256, 512)) -> tuple[int, int, int]:
+    """Pallas GEMM block sizes by the paper's effective-throughput metric:
+    utilization (edge waste) x memory-energy proxy (bytes per MAC)."""
+    best, best_score = (MXU, MXU, MXU), -1.0
+    for bm in candidates:
+        for bn in candidates:
+            for bk in candidates:
+                tiles_m, tiles_n, tiles_k = (math.ceil(m / bm),
+                                             math.ceil(n / bn),
+                                             math.ceil(k / bk))
+                util = (m * n * k) / (tiles_m * bm * tiles_n * bn *
+                                      tiles_k * bk)
+                # bytes/MAC ~ 1/bm + 1/bn + 1/bk (edge traffic per block)
+                mem = 1.0 / bm + 1.0 / bn + 1.0 / bk
+                # VMEM: 3 buffers x (bm*bk + bk*bn + bm*bn) x 2B must fit
+                vmem = 2 * 3 * (bm * bk + bk * bn + bm * bn)
+                if vmem > 12 * 2 ** 20:
+                    continue
+                score = util / (1.0 + 64 * mem)
+                if score > best_score:
+                    best, best_score = (bm, bn, bk), score
+    return best
+
+
+def plan_report(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict) -> str:
+    plan, table = choose_plan(cfg, shape, mesh_shape)
+    gemms = device_gemms(cfg, shape, plan)
+    lines = [f"autoshard {cfg.name} x {shape.name}:"]
+    for desc, score in table:
+        lines.append(f"  {desc:40s} eff={score:8.2f} TOPS")
+    lines.append(f"  -> {plan.describe()}; tiles/device="
+                 f"{tiles_exposed(gemms)} (pods-per-chip criterion: >= 1)")
+    return "\n".join(lines)

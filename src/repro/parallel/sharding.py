@@ -1,0 +1,244 @@
+"""Logical-axis -> PartitionSpec rules with divisibility guards.
+
+Every ParamSpec carries logical axis names ("embed", "heads", "ff",
+"experts", "vocab", ...). `pspecs_from_schema` maps them onto mesh axes via
+RULES, dropping any assignment whose dimension is not divisible by the mesh
+axis size (e.g. whisper's 12 heads or hymba's 25 heads on a 16-way model
+axis fall back to replication — correctness first, the autosharder reports
+the utilization cost).
+
+Activation constraints use the same mechanism via `act_pspec`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.layers import is_spec
+
+# parameter logical axes -> preferred mesh axes (in priority order)
+PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "embed": (),                # replicated (TP shards the other operand dim)
+    "ff": ("model",),
+    "expert_ff": (),            # experts already shard over model
+    "heads": ("model",),
+    "kv_heads": ("model",),     # guarded: kv counts rarely divide
+    "experts": ("model",),
+    "vocab": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "layers": (),
+    None: (),
+}
+
+# activation tags -> pspec builders
+ACT_RULES: dict[str, tuple] = {
+    "residual": ("batch", None, None),          # [B, S, D]
+    "logits": ("batch", None, "vocab_model"),   # [B, S, V]
+}
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: ('pod', 'data') when multi-pod, else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def pspec_for_axes(axes: tuple, shape: tuple, mesh: Mesh,
+                   rules: dict | None = None) -> P:
+    rules = rules or PARAM_RULES
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        assigned: Optional[str] = None
+        for cand in rules.get(ax, ()):
+            if cand in mesh.shape and cand not in used:
+                if dim % mesh.shape[cand] == 0 and dim >= mesh.shape[cand]:
+                    assigned = cand
+                    used.add(cand)
+                    break
+        out.append(assigned)
+    return P(*out)
+
+
+def pspecs_from_schema(schema, mesh: Mesh, rules: dict | None = None):
+    return jax.tree.map(
+        lambda s: pspec_for_axes(s.axes, s.shape, mesh, rules), schema,
+        is_leaf=is_spec)
+
+
+def fsdp_pspecs_from_schema(schema, mesh: Mesh, rules: dict | None = None):
+    """TP rules + the DP axes sharded onto each param's largest free dim
+    (FSDP/ZeRO-3): weights live fully sharded, GSPMD all-gathers one
+    scanned layer at a time in the forward and reduce-scatters its grads —
+    what makes the 236B/340B train cells and big-model serving fit HBM."""
+    def spec(s):
+        base = pspec_for_axes(s.axes, s.shape, mesh, rules)
+        return zero1_pspec(base, s.shape, mesh)
+    return jax.tree.map(spec, schema, is_leaf=is_spec)
+
+
+# §Perf variant (llama-vision prefill hillclimb): attention goes
+# sequence-parallel — q/k/v/o weights replicated (FSDP re-shards them over
+# DP), so head-sharding's per-layer [B,S,D]-sized partial-sum reductions
+# disappear; only the FFN keeps TP. The residual stays sequence-sharded
+# and attention exchanges the (much smaller) KV tensors instead.
+ATTN_SP_RULES = dict(PARAM_RULES)
+ATTN_SP_RULES["heads"] = ()
+ATTN_SP_RULES["kv_heads"] = ()
+
+
+def shardings_from_schema(schema, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, pspec_for_axes(s.axes, s.shape, mesh)),
+        schema, is_leaf=is_spec)
+
+
+def act_pspec(kind: str, mesh: Mesh, shape: tuple | None = None,
+              vocab: int | None = None,
+              seq_shard: bool = False) -> P:
+    """PartitionSpec for an activation tag. batch -> all DP axes;
+    logits vocab dim -> model (if divisible); residual seq -> model when
+    sequence parallelism is on."""
+    dp = batch_axes(mesh)
+    if kind == "residual":
+        seq = ("model",) if (seq_shard and "model" in mesh.shape) else None
+        return P(dp if dp else None, seq if seq else None, None)
+    if kind == "logits":
+        vshard = None
+        if vocab is not None and "model" in mesh.shape and \
+                vocab % mesh.shape["model"] == 0:
+            vshard = "model"
+        return P(dp if dp else None, None, vshard)
+    if kind == "moe_dispatched" and shape is not None:
+        # [G, E, C, D]: groups over DP, experts over model (EP) — pins the
+        # dispatch->expert resharding to one all-to-all instead of letting
+        # GSPMD replicate (§Perf)
+        e_ok = ("model" in mesh.shape and len(shape) >= 2
+                and shape[1] % mesh.shape["model"] == 0)
+        g_ok = shape[0] % _dp_size(mesh) == 0
+        return P(dp if (dp and g_ok) else None,
+                 "model" if e_ok else None, None, None)
+    return P()
+
+
+def make_constrain(mesh: Mesh, vocab: int, seq_shard: bool = False):
+    """The Model's `constrain` hook: with_sharding_constraint on tagged
+    activations so GSPMD places collectives where we want them."""
+    def constrain(x, kind: str):
+        if mesh is None or x.ndim < 2:
+            return x
+        spec = act_pspec(kind, mesh, shape=x.shape, vocab=vocab,
+                         seq_shard=seq_shard)
+        if len(spec) > x.ndim:
+            spec = P(*tuple(spec)[:x.ndim])
+        if len(spec) < x.ndim:
+            spec = P(*(tuple(spec) + (None,) * (x.ndim - len(spec))))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """Input batch arrays: [B, S, ...] with B over all DP axes."""
+    dp = batch_axes(mesh)
+    return NamedSharding(mesh, P(dp if dp else None,
+                                 *([None] * (ndim - 1))))
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, mla_seq_shard: bool = False,
+                 kv_seq_shard: bool = False):
+    """PartitionSpecs for a serving cache pytree (built by Model.init_cache).
+
+    Layouts are fixed by construction (models/attention, models/ssm,
+    models/transformer): the dataclass field name at the end of the tree
+    path identifies each leaf, and the rank disambiguates stacked vs
+    unstacked. Batch dims shard over the DP axes; KV-head / SSM-head dims
+    over `model` when divisible (virtual-KV replication in Model.kv_rep
+    makes the decode caches divisible for GQA archs).
+    """
+    dp = batch_axes(mesh)
+    dpa = dp if len(dp) > 1 else (dp[0] if dp else None)
+    msize = mesh.shape.get("model", 1)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for path, leaf in flat:
+        field = str(getattr(path[-1], "name", getattr(path[-1], "key", "")))
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if field in ("k", "v"):            # [(L[,G]),B,S,KV,hd]
+            b_ax, s_ax, kv_ax = nd - 4, nd - 3, nd - 2
+            if leaf.shape[b_ax] % _dp_size(mesh) == 0:
+                spec[b_ax] = dpa
+            if msize > 1 and leaf.shape[kv_ax] % msize == 0:
+                spec[kv_ax] = "model"
+            elif kv_seq_shard and msize > 1 and \
+                    leaf.shape[s_ax] % msize == 0 and leaf.shape[s_ax] > 1:
+                # §Perf: heads don't divide the model axis (whisper kv=12
+                # on 16) — shard the cache SEQUENCE instead (flash-decode
+                # over sequence shards; GSPMD distributes the softmax)
+                spec[s_ax] = "model"
+        elif field in ("c_kv", "k_rope"):  # [(L,)B,S,R] — latent cache
+            b_ax, s_ax = nd - 3, nd - 2
+            if leaf.shape[b_ax] % _dp_size(mesh) == 0:
+                spec[b_ax] = dpa
+            # §Perf: flash-decode style — shard the latent cache's SEQUENCE
+            # over the model axis (the R dim is contracted in the absorbed
+            # decode, so GSPMD turns softmax/out into psums over `model`)
+            if mla_seq_shard and msize > 1 and \
+                    leaf.shape[s_ax] % msize == 0:
+                spec[s_ax] = "model"
+        elif field == "conv":              # [(L,)B,K-1,C]
+            b_ax, c_ax = nd - 3, nd - 1
+            if leaf.shape[b_ax] % _dp_size(mesh) == 0:
+                spec[b_ax] = dpa
+            if msize > 1 and leaf.shape[c_ax] % msize == 0:
+                spec[c_ax] = "model"
+        elif field == "state":             # [(L,)B,H,P,N]
+            b_ax, h_ax = nd - 4, nd - 3
+            if leaf.shape[b_ax] % _dp_size(mesh) == 0:
+                spec[b_ax] = dpa
+            if msize > 1 and leaf.shape[h_ax] % msize == 0:
+                spec[h_ax] = "model"
+        # length vectors and anything unknown stay replicated
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return max(1, n)
+
+
+def zero1_pspec(param_pspec: P, shape: tuple, mesh: Mesh) -> P:
+    """ZeRO-1: optimizer-state sharding — add DP axes onto the largest
+    unsharded dim of the param spec (guarded by divisibility)."""
+    dp = batch_axes(mesh)
+    if not dp:
+        return param_pspec
+    # idempotent: FSDP param specs already carry the DP axes
+    used = set()
+    for entry in param_pspec:
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+    if any(a in used for a in dp):
+        return param_pspec
+    dp_size = math.prod(_mesh_axis_size(mesh, a) for a in dp)
+    spec = list(param_pspec) + [None] * (len(shape) - len(param_pspec))
+    # pick the largest dim currently unsharded and divisible by dp
+    best, best_dim = -1, 0
+    for i, (d, s) in enumerate(zip(shape, spec)):
+        if s is None and d % dp_size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best >= 0:
+        spec[best] = dp if len(dp) > 1 else dp[0]
+    return P(*spec)

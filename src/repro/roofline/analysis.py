@@ -1,0 +1,171 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (per-device on a
+partitioned module; x chips to totalize). collective_bytes is parsed from
+compiled.as_text(): a first pass builds the instruction -> shape symbol
+table, a second sums *operand* sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_PER_CHIP = 16 * 2 ** 30  # v5e capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# "%name = f32[8,128]{1,0} op-name(%a, %b), ..."  (also tuple shapes)
+_DEF_RE = re.compile(r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}: ]+?)\s+"
+                     r"([\w\-]+)\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape like 'bf16[8,128]{1,0}' or a '(tuple, ...)'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device bytes moved per collective kind (operand sizes)."""
+    shapes: dict[str, str] = {}
+    ops: list[tuple[str, str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if not m:
+            continue
+        name, shape, opname, operands = m.groups()
+        shapes[name] = shape
+        base = opname.rstrip(".0123456789")
+        if any(base.startswith(c) for c in COLLECTIVE_OPS):
+            ops.append((base, operands, shape))
+
+    out = {c: 0 for c in COLLECTIVE_OPS}
+    for base, operands, result_shape in ops:
+        kind = next(c for c in COLLECTIVE_OPS if base.startswith(c))
+        nbytes = 0
+        for opnd in operands.split(","):
+            opnd = opnd.strip().lstrip("%")
+            # operands may carry inline shapes: "bf16[4,8]{1,0} %x"
+            if " " in opnd:
+                nbytes += _shape_bytes(opnd.split(" ")[0])
+            elif opnd in shapes:
+                nbytes += _shape_bytes(shapes[opnd])
+        if nbytes == 0:  # fall back to result size
+            nbytes = _shape_bytes(result_shape)
+        out[kind] += nbytes
+    out["total"] = sum(out[c] for c in COLLECTIVE_OPS)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    collective_by_kind: dict | None = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / self.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def model_flops_ratio(self, model_flops_total: float) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        hlo_total = self.flops_per_device * self.chips
+        return model_flops_total / hlo_total if hlo_total else 0.0
+
+    def roofline_fraction(self, model_flops_total: float) -> float:
+        """useful-FLOPs time at peak / bound time — the §Perf score."""
+        useful_s = model_flops_total / (self.chips * self.peak_flops)
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self, model_flops_total: float | None = None) -> dict:
+        d = {
+            "name": self.name,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+        if model_flops_total is not None:
+            d["model_flops"] = model_flops_total
+            d["model_flops_ratio"] = self.model_flops_ratio(model_flops_total)
+            d["roofline_fraction"] = self.roofline_fraction(model_flops_total)
+        return d
+
+
+def from_compiled(name: str, compiled, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    r = Roofline(
+        name=name, chips=chips, flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=float(coll["total"]))
+    r.collective_by_kind = {k: v for k, v in coll.items() if k != "total"}
+    return r
+
+
+def model_flops(n_params_active: float, tokens: float,
+                train: bool) -> float:
+    """6·N·D for a train step (fwd+bwd), 2·N·D for inference."""
+    return (6.0 if train else 2.0) * n_params_active * tokens

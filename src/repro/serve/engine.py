@@ -1,0 +1,138 @@
+"""Batched serving engine: continuous batching over prefill + decode.
+
+The engine owns a fixed decode batch of `slots`; requests queue, prefill
+into a free slot's cache lane, and decode step-locked with the rest of the
+batch (the standard continuous-batching pattern). Per-slot caches live in
+one batched cache pytree — slot insertion is a dynamic_update along the
+batch axis, so the whole engine is jit-compatible and shardable (batch axis
+over the DP mesh axes).
+
+SOSA tie-in (§6.1 multi-tenancy): co-scheduling independent request
+streams is exactly the paper's multi-tenant utilization argument — decode
+GEMVs from many requests fuse into one batched GEMM, raising tiles/pod.
+`benchmarks/multitenancy.py` quantifies it with the simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, slots: int = 4,
+                 max_len: int = 512, src_len: int = 0,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(slots, max_len, src_len=src_len)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.positions = np.zeros(slots, np.int32)
+        self.budgets = np.zeros(slots, np.int32)
+        self.queue: list[Request] = []
+        self._decode = jax.jit(model.decode_step)
+
+    # -- request flow --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Prefill a single request into one slot lane of the batched cache
+        (single-lane prefill batch; production would group same-length
+        prompts — the batching policy is orthogonal to the cache layout)."""
+        S = len(req.prompt)
+        lane_cache = self.model.init_cache(1, self.max_len)
+        logits, lane_cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
+            lane_cache)
+        self.cache = _write_lane(self.cache, lane_cache, slot)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self.active[slot] = req
+        self.positions[slot] = S
+        self.budgets[slot] = req.max_new_tokens - 1
+
+    # -- decode loop -----------------------------------------------------
+    def step(self) -> int:
+        """One step-locked decode over all active slots. Returns #active."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros(self.slots, np.int32)
+        for i in live:
+            toks[i] = self.active[i].out[-1]
+        # per-lane positions: mixed-length requests decode together, each
+        # lane masked by its own cache length (continuous batching)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.positions))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in live:
+            r = self.active[i]
+            tok = int(nxt[i])
+            r.out.append(tok)
+            self.positions[i] += 1
+            self.budgets[i] -= 1
+            if self.budgets[i] <= 0 or (self.eos_id is not None
+                                        and tok == self.eos_id):
+                r.done = True
+                self.active[i] = None
+        return len(live)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not any(self.active):
+                return
+            self.step()
+
+
+def _write_lane(batched_cache, lane_cache, slot: int):
+    """Insert a 1-lane cache into slot `slot` of the batched cache.
+
+    Both trees have identical structure; lane arrays have batch dim 1. The
+    batch axis position differs by cache kind: stacked-layer caches are
+    [L, B, ...], unstacked [B, ...] — detected from rank difference."""
+    def ins(big, small):
+        if small.shape == big.shape:
+            return small
+        # find the axis where big has `slots` and small has 1 (batch axis;
+        # includes the per-lane length vectors [B] / [L, B])
+        for ax in range(small.ndim):
+            if small.shape[ax] == 1 and big.shape[ax] != 1:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=ax)
+        return big
+    return jax.tree.map(ins, batched_cache, lane_cache)

@@ -1,0 +1,6 @@
+from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw, lr_schedule
+from .train_step import TrainConfig, make_eval_step, make_train_step
+from .checkpoint import (latest_step, prune_checkpoints, restore_checkpoint,
+                         save_checkpoint)
+from .data import DataConfig, batches
+from .fault import ElasticMesh, Heartbeat, StragglerPolicy

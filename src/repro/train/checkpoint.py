@@ -1,0 +1,120 @@
+"""Sharded checkpointing with atomic two-phase commit + resume.
+
+Layout:  <dir>/step_<N>/
+           meta.json              (step, tree structure, shapes, dtypes)
+           shard_<host>.npz       (this host's param/optimizer leaves)
+           COMMITTED              (written last — a checkpoint without it
+                                   is torn and ignored on restore)
+
+Fault-tolerance contract (train/fault.py): any host can die at any point;
+restore picks the newest COMMITTED step. Writes go to a temp dir + rename,
+so a crash mid-save never corrupts the previous checkpoint. On multi-host
+JAX each host saves its addressable shards; here (single host) that is the
+whole tree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, host: int = 0) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=ckpt_dir)
+    try:
+        leaves = _leaf_paths(tree)
+        arrays = {}
+        dtypes = {}
+        for k, v in leaves:
+            a = np.asarray(v)
+            dtypes[k] = str(a.dtype)
+            if a.dtype.kind not in "biufc":   # bf16 etc: store raw bits
+                a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+            arrays[k] = a
+        np.savez(os.path.join(tmp, f"shard_{host}.npz"), **arrays)
+        meta = {
+            "step": step,
+            "keys": [k for k, _ in leaves],
+            "dtypes": dtypes,
+            "shapes": {k: list(np.asarray(v).shape) for k, v in leaves},
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(ckpt_dir, name, "COMMITTED")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, tree_like, step: int | None = None,
+                       host: int = 0):
+    """Restore into the structure of `tree_like` (shapes must match)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            return None, None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(f"checkpoint at step {step} not committed")
+    import json as _json
+    import ml_dtypes
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = _json.load(f)
+    data = np.load(os.path.join(path, f"shard_{host}.npz"))
+    leaves = _leaf_paths(tree_like)
+    flat_restored = []
+    for key, like in leaves:
+        arr = data[key]
+        want = meta["dtypes"].get(key, str(arr.dtype))
+        if str(arr.dtype) != want:            # raw-bit dtypes (bf16, fp8)
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+        assert tuple(arr.shape) == tuple(np.shape(like)), (
+            key, arr.shape, np.shape(like))
+        flat_restored.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, flat_restored), step
+
+
+def prune_checkpoints(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,117 @@
+"""Cross-pod gradient synchronization — the paper's interconnect pillar as
+a first-class training feature.
+
+On the multi-pod mesh only data-parallel gradient sums cross the `pod`
+axis (DCN-grade links). This module provides drop-in reducers for that
+axis, selectable per deployment:
+
+    "psum"        — XLA default (torus-optimal rings on ICI; baseline)
+    "butterfly"   — log2(N)-round recursive doubling (parallel/collectives):
+                    latency-optimal for the many *small* tensors a
+                    SOSA-granularity fleet produces (the paper's Butterfly
+                    argument transplanted to collectives)
+    "compressed"  — int8 block-quantized psum with error feedback
+                    (parallel/compression): 4x fewer bytes on the slowest
+                    links; the error-feedback state rides in the optimizer
+                    carry so compressed SGD stays unbiased across steps
+
+All reducers run under shard_map over the reduction axis and are
+numerically validated against plain psum in tests/test_grad_sync.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..parallel.collectives import (butterfly_all_reduce,
+                                    butterfly_all_reduce_expansion2)
+from ..parallel.compression import compressed_psum
+
+
+def _flatten_grads(grads):
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    shapes = [(l.shape, l.dtype, l.size) for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    return flat, shapes, treedef
+
+
+def _unflatten_grads(flat, shapes, treedef):
+    out = []
+    off = 0
+    for shape, dtype, size in shapes:
+        out.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_grad_sync(mesh: Mesh, axis: str = "pod", impl: str = "psum"):
+    """Returns sync(grads, error) -> (reduced_grads, new_error).
+
+    grads must be replicated along `axis` up to the missing sum (i.e. each
+    pod holds its local-batch gradient); other axes' sharding is preserved
+    by flattening per-shard (the reducer runs pointwise per shard).
+    `error` is the error-feedback carry for "compressed" (None otherwise).
+    """
+    if axis not in mesh.shape:
+        return lambda grads, error=None: (grads, error)
+
+    def sync(grads, error=None):
+        flat, shapes, treedef = _flatten_grads(grads)
+
+        if impl == "psum":
+            def red(x, e):
+                return jax.lax.psum(x, axis), e
+        elif impl == "butterfly":
+            def red(x, e):
+                return butterfly_all_reduce(x, axis), e
+        elif impl == "butterfly2":
+            def red(x, e):
+                return butterfly_all_reduce_expansion2(x, axis), e
+        elif impl == "compressed":
+            def red(x, e):
+                r, ne = compressed_psum(x, axis, e)
+                return r, ne
+        else:
+            raise ValueError(impl)
+
+        if error is None and impl == "compressed":
+            error = jnp.zeros_like(flat)
+
+        other_axes = tuple(a for a in mesh.axis_names if a != axis)
+        spec = P(other_axes if len(other_axes) > 1 else
+                 (other_axes[0] if other_axes else None))
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(spec, spec if error is not None else P()),
+            out_specs=(spec, spec if error is not None else P()),
+            check_rep=False)
+        def run(x, e):
+            r, ne = red(x, e if error is not None else None)
+            return r, (ne if ne is not None else jnp.zeros((), x.dtype))
+
+        # pad so the flat vector divides the non-reduction shards
+        import math
+        denom = math.prod(mesh.shape[a] for a in other_axes) or 1
+        pad = (-flat.shape[0]) % denom
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+            if error is not None:
+                error = jnp.pad(error, (0, pad))
+        red_flat, new_error = run(flat, error if error is not None else
+                                  jnp.zeros((), flat.dtype))
+        if pad:
+            red_flat = red_flat[:-pad]
+            if error is not None:
+                new_error = new_error[:-pad]
+        return _unflatten_grads(red_flat, shapes, treedef), \
+            (new_error if error is not None else None)
+
+    return sync

@@ -1,0 +1,99 @@
+"""AdamW with mixed precision and ZeRO-1-shardable state.
+
+State layout: fp32 master params + fp32 m/v moments, all plain pytrees so
+the launcher can place them with `parallel.sharding.zero1_pspec` (moments
+sharded across the DP axes — the ZeRO-1 trick; working params stay bf16 and
+TP-sharded only). Pure functions; no optax dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any      # fp32 params
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # moments in bf16 halve optimizer HBM (340B: 2.7 TB -> 1.35 TB) at a
+    # small noise cost; master params stay fp32 (the accuracy-critical part)
+    moment_dtype: str = "float32"
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, cfg.warmup_steps)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        1.0, cfg.total_steps - cfg.warmup_steps)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr_peak * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_adamw(params, cfg: AdamWConfig | None = None) -> AdamWState:
+    mdt = jnp.float32 if cfg is None or cfg.moment_dtype == "float32" \
+        else jnp.bfloat16
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+    return AdamWState(jnp.zeros((), jnp.int32), master, zeros(), zeros())
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, state: AdamWState, grads,
+                 compute_dtype=jnp.bfloat16):
+    """One step. grads may be bf16; moments/master update in fp32.
+    Returns (new_params_compute_dtype, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.float32 if cfg.moment_dtype == "float32" else jnp.bfloat16
+
+    def upd(p32, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return p32, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(state.master)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    master = treedef.unflatten([o[0] for o in out])
+    m = treedef.unflatten([o[1] for o in out])
+    v = treedef.unflatten([o[2] for o in out])
+    params = jax.tree.map(lambda p: p.astype(compute_dtype), master)
+    return params, AdamWState(step, master, m, v), {
+        "grad_norm": gnorm, "lr": lr}

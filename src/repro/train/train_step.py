@@ -1,0 +1,86 @@
+"""Training step: bf16 compute, remat over layers, microbatch grad-accum
+(compute/comm overlap: XLA pipelines the DP gradient reduction of
+microbatch i with the compute of microbatch i+1 when accumulation is a
+scan — the paper's 'hide data movement under compute' at mesh scale)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .optimizer import AdamWConfig, AdamWState, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    # remat is per-layer inside the model (Model(remat=True)); this flag
+    # adds an additional whole-microbatch checkpoint (rarely needed).
+    remat: bool = False
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+def loss_fn(model: Model, params, batch):
+    return model.loss(params, batch)
+
+
+def _split_micro(batch, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def grads_fn(model: Model, tcfg: TrainConfig):
+    """Returns f(params, batch) -> (loss, grads) with microbatching."""
+    base = functools.partial(loss_fn, model)
+    if tcfg.remat:
+        # remat the per-microbatch forward; the scan-over-layers inside the
+        # model already bounds live activations to O(1 layer)
+        base = jax.checkpoint(base, static_argnums=())
+    vg = jax.value_and_grad(base)
+
+    if tcfg.microbatches == 1:
+        return vg
+
+    def accum(params, batch):
+        micro = _split_micro(batch, tcfg.microbatches)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = vg(params, mb)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / tcfg.microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    return accum
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    gf = grads_fn(model, tcfg)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = gf(params, batch)
+        params, opt_state, om = adamw_update(tcfg.optimizer, opt_state, grads)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step

@@ -1,0 +1,224 @@
+"""Core SOSA library: tiling / interconnect / scheduler / simulator —
+unit + hypothesis property tests, including the paper-faithfulness gates
+from DESIGN.md §7."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AcceleratorConfig, ArrayConfig, ButterflyRouter,
+                        GemmSpec, SliceScheduler, analyze, benes_spec,
+                        butterfly_spec, crossbar_spec, make_router,
+                        max_pods_under_tdp, merge_workloads, simulate,
+                        tile_gemm, tile_workload)
+from repro.core.executor import run_gemm_on_sosa
+from repro.core.interconnect import butterfly_paths_conflict
+from repro.core.workloads import bert, densenet, inception_v3, resnet
+from repro.core.dse import table2_rows
+from repro.core.simulator import icn_spec_for
+
+
+# --------------------------------------------------------------------------
+# power model (Table 2 'Peak Power' column, DESIGN §7.1)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols,pods,paper_watts", [
+    (512, 512, 1, 113.2), (256, 256, 8, 245.0), (128, 128, 32, 283.1),
+    (64, 64, 128, 362.2), (16, 16, 512, 210.6), (32, 32, 256, 260.2),
+])
+def test_power_model_matches_table2(rows, cols, pods, paper_watts):
+    icn = 0.52 if pods > 1 else 0.0
+    a = AcceleratorConfig(array=ArrayConfig(rows, cols), num_pods=pods,
+                          icn_mw_per_byte=icn)
+    assert abs(a.peak_watts - paper_watts) / paper_watts < 0.03
+
+
+def test_pod_count_selection_matches_paper():
+    for (r, pods) in ((16, 512), (32, 256), (64, 128), (128, 32), (256, 8)):
+        assert max_pods_under_tdp(ArrayConfig(r, r), 0.52) == pods
+
+
+def test_peak_throughput_at_tdp():
+    a = AcceleratorConfig(array=ArrayConfig(512, 512), num_pods=1,
+                          icn_mw_per_byte=0.0)
+    assert abs(a.peak_ops_at_tdp / 1e12 - 1853) < 20   # paper: 1853 TOPS
+
+
+# --------------------------------------------------------------------------
+# tiling
+# --------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(d1=st.integers(1, 300), d2=st.integers(1, 300), d3=st.integers(1, 300))
+def test_tiling_covers_gemm_exactly(d1, d2, d3):
+    """Tiles partition the GEMM: MAC counts add up exactly, every chain
+    has ceil(d2/r) links, parallel width is ceil(d1/r)*ceil(d3/c)."""
+    arr = ArrayConfig(32, 32)
+    g = tile_gemm(GemmSpec(d1, d2, d3), arr)
+    assert g.total_macs == d1 * d2 * d3
+    n_i, n_j, n_l = (math.ceil(d1 / 32), math.ceil(d2 / 32),
+                     math.ceil(d3 / 32))
+    assert len(g.ops) == n_i * n_j * n_l
+    assert g.parallel_frontier() == n_i * n_l
+    assert len(g.final_tiles) == n_i * n_l
+
+
+def test_tiling_partition_rule_default_is_rows():
+    arr = ArrayConfig(rows=20, cols=64)
+    g = tile_gemm(GemmSpec(100, 64, 64), arr)
+    ks = {op.k for op in g.ops}
+    assert ks == {20}  # 100 = 5 x 20 exactly
+
+
+# --------------------------------------------------------------------------
+# butterfly routing
+# --------------------------------------------------------------------------
+
+def test_butterfly_identity_routes():
+    r = ButterflyRouter(8, expansion=1)
+    assert r.route([(i, i) for i in range(8)])
+
+
+def test_butterfly1_blocks_some_permutation_butterfly2_does_not():
+    """The paper's Fig 6 argument: expansion 2 recovers permutations a
+    standard butterfly cannot route."""
+    import itertools
+    r1 = ButterflyRouter(8, expansion=1)
+    r2 = ButterflyRouter(8, expansion=2)
+    blocked = []
+    for perm in itertools.islice(itertools.permutations(range(8)), 500):
+        pairs = list(enumerate(perm))
+        if not r1.route(pairs):
+            blocked.append(pairs)
+    assert blocked, "butterfly-1 should block some permutations"
+    assert all(ButterflyRouter(8, expansion=2).route(p) for p in blocked[:50])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.permutations(list(range(16))))
+def test_benes_crossbar_route_everything(perm):
+    for kind in ("benes", "crossbar"):
+        assert make_router(kind, 16).route(list(enumerate(perm)))
+
+
+def test_butterfly_multicast_shares_edges():
+    r = ButterflyRouter(8, expansion=1)
+    # same source to all destinations = multicast tree, must route
+    assert r.route([(3, d) for d in range(8)])
+
+
+@settings(max_examples=50, deadline=None)
+@given(s1=st.integers(0, 15), d1=st.integers(0, 15),
+       s2=st.integers(0, 15), d2=st.integers(0, 15))
+def test_conflict_is_symmetric(s1, d1, s2, d2):
+    assert butterfly_paths_conflict(4, s1, d1, s2, d2) == \
+        butterfly_paths_conflict(4, s2, d2, s1, d1)
+
+
+def test_icn_cost_model_matches_table1():
+    for kind, mw in (("butterfly-1", 0.23), ("butterfly-2", 0.52),
+                     ("crossbar", 7.36), ("benes", 0.92)):
+        got = icn_spec_for(kind, 256).mw_per_byte
+        assert abs(got - mw) / mw < 0.30, (kind, got, mw)
+
+
+# --------------------------------------------------------------------------
+# scheduler + executor (numerical proof)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(d1=st.integers(1, 120), d2=st.integers(1, 120), d3=st.integers(1, 120),
+       pods=st.sampled_from([4, 16]))
+def test_schedule_executes_exact_gemm(d1, d2, d3, pods):
+    rng = np.random.default_rng(d1 * 7 + d2 * 3 + d3)
+    x = rng.integers(-100, 100, (d1, d2), dtype=np.int8)
+    w = rng.integers(-100, 100, (d2, d3), dtype=np.int8)
+    out, sched, graph = run_gemm_on_sosa(x, w, ArrayConfig(32, 32),
+                                         num_pods=pods)
+    assert np.array_equal(out, x.astype(np.int32) @ w.astype(np.int32))
+
+
+def test_schedule_respects_dependencies_and_banks():
+    arr = ArrayConfig(32, 32)
+    graph = tile_workload([GemmSpec(64, 96, 64, gemm_id=0),
+                           GemmSpec(64, 64, 64, gemm_id=1,
+                                    depends_on=(0,))], arr, num_banks=8)
+    sched = SliceScheduler(num_pods=8, array_rows=32, pipeline_latency=4
+                           ).schedule(graph)
+    slot = sched.assignments
+    for op in graph.ops:
+        for dep in op.depends_on:
+            assert slot[dep][0] < slot[op.op_id][0]
+    # single-ported psum banks: within a slice no bank is written twice
+    for sl in range(sched.num_slices):
+        ops_in = [op for op in graph.ops if slot[op.op_id][0] == sl]
+        pbanks = [op.p_bank for op in ops_in]
+        assert len(pbanks) == len(set(pbanks))
+        pods = [slot[op.op_id][1] for op in ops_in]
+        assert len(pods) == len(set(pods))
+
+
+# --------------------------------------------------------------------------
+# simulator: the paper's headline results (trend gates, DESIGN §7)
+# --------------------------------------------------------------------------
+
+def test_granularity_32x32_beats_large_arrays():
+    from repro.core.workloads import full_suite
+    rows = {(p.rows, p.cols): p for p in table2_rows(full_suite())}
+    eff32 = rows[(32, 32)].effective_tops_at_tdp
+    assert eff32 > rows[(256, 256)].effective_tops_at_tdp
+    assert eff32 > rows[(512, 512)].effective_tops_at_tdp
+    assert eff32 > rows[(16, 16)].effective_tops_at_tdp
+    # utilization ordering: small arrays utilize better
+    assert rows[(16, 16)].utilization > rows[(128, 128)].utilization \
+        > rows[(512, 512)].utilization
+
+
+def test_tiling_gain_over_no_partitioning():
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=256)
+    wl = bert("medium", 100)
+    opt = analyze(wl, accel, k_part=32)
+    none = analyze(wl, accel, k_part=10 ** 9)
+    assert opt.utilization > 1.5 * none.utilization
+
+
+def test_multitenancy_gain():
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=256)
+    rn, bt = resnet(50, 224), bert("medium", 100)
+    r = analyze(rn, accel)
+    b = analyze(bt, accel)
+    util_seq = (r.total_macs + b.total_macs) / (
+        256 * 1024 * (r.total_cycles + b.total_cycles))
+    par = analyze(merge_workloads(rn, bt), accel)
+    assert par.utilization > 1.1 * util_seq
+
+
+def test_benes_latency_exposed():
+    # the paper's scale: at 256 pods Benes' 2logN-1 (+copy) stages exceed
+    # the 32-cycle tile and become exposed (Table 1: ~30 vs ~20 cyc/tile)
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=256)
+    wl = bert("mini", 100)
+    fast = simulate(wl, accel, interconnect="butterfly-2")
+    slow = simulate(wl, accel, interconnect="benes")
+    assert slow.cycles_per_tile > 1.2 * fast.cycles_per_tile
+
+
+def test_butterfly1_busy_pods_lower():
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=64)
+    wl = merge_workloads(resnet(50, 128), bert("mini", 100))
+    b1 = simulate(wl, accel, interconnect="butterfly-1")
+    b2 = simulate(wl, accel, interconnect="butterfly-2")
+    assert b2.busy_pods >= b1.busy_pods
+
+
+def test_workload_traces_sane():
+    assert len(resnet(50)) == 54
+    assert len(resnet(152)) == 156
+    assert len(densenet(121)) == 121
+    assert len(inception_v3()) == 95
+    # BERT-base: 12 layers x (qkv + 2*12heads attn + o + 2 ffn) = 360
+    assert len(bert("base", 100)) == 360
+    for g in resnet(50):
+        assert g.d1 > 0 and g.d2 > 0 and g.d3 > 0

@@ -1,0 +1,206 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests,
+all against the pure-jnp ref.py oracles (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.systolic_gemm.ops import systolic_gemm
+from repro.kernels.systolic_gemm.ref import systolic_gemm_ref
+
+RNG = np.random.default_rng(42)
+
+
+# --------------------------------------------------------------------------
+# systolic GEMM
+# --------------------------------------------------------------------------
+
+GEMM_SHAPES = [(64, 64, 64), (128, 256, 128), (100, 130, 70), (1, 1, 1),
+               (33, 257, 129), (8, 1024, 8), (512, 64, 512)]
+
+
+@pytest.mark.parametrize("shape", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", ["int8", "bfloat16", "float32"])
+def test_systolic_gemm_shapes(shape, dtype):
+    M, K, N = shape
+    if dtype == "int8":
+        x = jnp.asarray(RNG.integers(-100, 100, (M, K)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-100, 100, (K, N)), jnp.int8)
+        tol = 1e-5
+    else:
+        x = jnp.asarray(RNG.standard_normal((M, K)), dtype)
+        w = jnp.asarray(RNG.standard_normal((K, N)), dtype)
+        tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    out = systolic_gemm(x, w, interpret=True)
+    ref = systolic_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu", "relu2"])
+def test_systolic_gemm_epilogue(act):
+    """The fused post-processor epilogue (scale + bias + activation)."""
+    M, K, N = 96, 160, 72
+    x = jnp.asarray(RNG.integers(-64, 64, (M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-64, 64, (K, N)), jnp.int8)
+    s = jnp.asarray(RNG.random(N) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal(N), jnp.float32)
+    out = systolic_gemm(x, w, s, b, activation=act, interpret=True)
+    ref = systolic_gemm_ref(x, w, s, b, activation=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(64, 64, 64), (128, 64, 256), (32, 128, 32)])
+def test_systolic_gemm_block_invariance(blocks):
+    """SOSA pillar 1 as a property: the result must be invariant to the pod
+    (block) granularity — only throughput/Watt changes, never the math."""
+    bm, bn, bk = blocks
+    M, K, N = 160, 192, 136
+    x = jnp.asarray(RNG.integers(-50, 50, (M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-50, 50, (K, N)), jnp.int8)
+    out = systolic_gemm(x, w, block_m=bm, block_n=bn, block_k=bk,
+                        interpret=True)
+    ref = systolic_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 80), k=st.integers(1, 80), n=st.integers(1, 80))
+def test_systolic_gemm_property(m, k, n):
+    x = jnp.asarray(RNG.integers(-8, 8, (m, k)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-8, 8, (k, n)), jnp.int8)
+    out = systolic_gemm(x, w, block_m=32, block_n=32, block_k=32,
+                        interpret=True)
+    ref = systolic_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, Sq, Hq, Hkv, D, causal, window
+    (2, 64, 4, 2, 32, True, None),
+    (1, 100, 8, 8, 16, True, None),
+    (2, 33, 4, 1, 64, False, None),
+    (1, 128, 5, 5, 32, True, 48),
+    (1, 256, 16, 2, 64, True, None),
+    (1, 80, 6, 3, 128, True, 16),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, S, Hq, Hkv, D, causal, win = case
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=win,
+                          block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_chunked_jax():
+    """Kernel == the pure-JAX chunked production path (same blocking)."""
+    from repro.models.attention import chunked_attention
+    q = jnp.asarray(RNG.standard_normal((2, 96, 8, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 96, 4, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 96, 4, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                        interpret=True)
+    b = chunked_attention(q, k, v, causal=True, kv_block=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 70), d=st.sampled_from([8, 16, 32]),
+       hq=st.sampled_from([1, 2, 4]), causal=st.booleans())
+def test_flash_attention_property(s, d, hq, causal):
+    q = jnp.asarray(RNG.standard_normal((1, s, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, s, 1, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, s, 1, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-3, atol=3e-3)
+
+
+# --------------------------------------------------------------------------
+# SSD
+# --------------------------------------------------------------------------
+
+SSD_CASES = [(2, 64, 4, 16, 1, 32, 16), (1, 100, 2, 8, 2, 16, 32),
+             (1, 32, 4, 16, 4, 8, 32), (2, 48, 8, 32, 1, 64, 16)]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_sweep(case):
+    b, S, H, P, G, N, chunk = case
+    x = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((b, S, H)) * 0.5 + 0.1, jnp.float32)
+    A = jnp.asarray(-RNG.random(H) - 0.1, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, S, G, N)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, S, G, N)), jnp.float32)
+    D = jnp.asarray(RNG.random(H), jnp.float32)
+    y, h = ssd(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    rep = H // G
+    yr, hr = ssd_ref(x, dt, A, jnp.repeat(B, rep, 2), jnp.repeat(C, rep, 2),
+                     D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is a tiling knob (SOSA pillar 3): must not change the
+    result."""
+    b, S, H, P, N = 1, 96, 2, 16, 32
+    x = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((b, S, H)) * 0.3 + 0.1, jnp.float32)
+    A = jnp.asarray(-RNG.random(H) - 0.1, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, S, 1, N)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, S, 1, N)), jnp.float32)
+    D = jnp.asarray(RNG.random(H), jnp.float32)
+    outs = [np.asarray(ssd(x, dt, A, B, C, D, chunk=c, interpret=True)[0])
+            for c in (16, 32, 96)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_decode_consistency():
+    """Sequential decode steps == chunked prefill (the serving invariant)."""
+    from repro.models.ssm import ssd_decode_step
+    b, S, H, P, N = 1, 24, 2, 8, 16
+    x = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.random((b, S, H)) * 0.3 + 0.1, jnp.float32)
+    A = jnp.asarray(-RNG.random(H) - 0.1, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, S, H, N)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, S, H, N)), jnp.float32)
+    D = jnp.asarray(RNG.random(H), jnp.float32)
+    y_chunk, h_chunk = ssd_ref(x, dt, A, B, C, D, chunk=8)
+    h = jnp.zeros((b, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, h = ssd_decode_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], D, h)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_chunk),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_chunk),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,111 @@
+"""Roofline HLO parsing, sharding rules, autoshard decisions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch
+from repro.models.layers import ParamSpec
+from repro.parallel.autoshard import (choose_blocks, choose_plan,
+                                      device_gemms, tiles_exposed)
+from repro.parallel.sharding import (pspec_for_axes, zero1_pspec)
+from repro.roofline.analysis import (Roofline, collective_bytes_from_hlo,
+                                     _shape_bytes)
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+    assert _shape_bytes("f32[4,4]") == 64
+    assert _shape_bytes("(f32[2,2], s32[4])") == 16 + 16
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collective_bytes_from_real_compile():
+    """Compile a psum under 8 fake devices in a subprocess-free way: use
+    a synthetic HLO snippet shaped like XLA output."""
+    hlo = """
+HloModule m
+ENTRY e {
+  %p0 = f32[16,64]{1,0} parameter(0)
+  %ar = f32[16,64]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[64,64]{1,0} all-gather(%p0), dimensions={0}
+  %cp = f32[16,64]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  ROOT %t = (f32[16,64]{1,0}) tuple(%cp)
+}
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-reduce"] == 16 * 64 * 4
+    assert out["all-gather"] == 16 * 64 * 4      # operand, not result
+    assert out["collective-permute"] == 16 * 64 * 4
+    assert out["total"] == 3 * 16 * 64 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(name="x", chips=256, flops_per_device=197e12,
+                 bytes_per_device=819e9 * 2,
+                 collective_bytes_per_device=50e9 * 0.5)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 2.0) < 1e-9
+    assert abs(r.collective_s - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    mf = 197e12 * 256  # exactly 1s of useful work at peak
+    assert abs(r.roofline_fraction(mf) - 0.5) < 1e-9
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+
+def _mesh():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_divisibility_guard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # model axis size 1: everything "divides" -> sharded on size-1 axis ok
+    s = pspec_for_axes(("embed", "heads", None), (64, 12, 16), mesh)
+    assert s == P(None, "model", None)
+
+
+def test_zero1_idempotent_and_guarded():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    base = P(None, "model")
+    z = zero1_pspec(base, (64, 128), mesh)
+    assert z[0] == "data"
+    assert zero1_pspec(z, (64, 128), mesh) == z  # idempotent
+
+
+# --------------------------------------------------------------------------
+# autoshard (the paper's tiling criterion at mesh scale)
+# --------------------------------------------------------------------------
+
+def test_choose_blocks_mxu_aligned():
+    bm, bn, bk = choose_blocks(4096, 4096, 11008)
+    assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+    # VMEM budget respected
+    assert 2 * 3 * (bm * bk + bk * bn + bm * bn) <= 12 * 2 ** 20
+
+
+def test_small_gemm_gets_small_blocks():
+    big = choose_blocks(8192, 8192, 8192)
+    small = choose_blocks(256, 256, 256)
+    assert small[0] <= big[0] and small[2] <= big[2]
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v2-236b"])
+def test_plan_exposes_enough_tiles(arch):
+    cfg = get_arch(arch)
+    mesh_shape = {"data": 16, "model": 16}
+    plan, table = choose_plan(cfg, SHAPES["train_4k"], mesh_shape)
+    gemms = device_gemms(cfg, SHAPES["train_4k"], plan)
+    assert tiles_exposed(gemms) >= 1
+    assert len(table) >= 2
+    # train plans consider sequence parallel + microbatching
+    assert any("sp=True" in desc for desc, _ in table)

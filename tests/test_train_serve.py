@@ -1,0 +1,169 @@
+"""Training stack + serving engine integration tests."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.data import DataConfig, batches
+from repro.train.fault import ElasticMesh, Heartbeat, StragglerPolicy
+from repro.train.optimizer import AdamWConfig, init_adamw, lr_schedule
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+def _setup(arch="granite-8b", seed=0):
+    cfg = reduced(get_arch(arch))
+    model = Model(cfg, remat=True)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def test_loss_decreases_over_steps():
+    cfg, model, params = _setup()
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr_peak=5e-3, warmup_steps=3,
+                                             total_steps=60,
+                                             weight_decay=0.0))
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    opt = init_adamw(params)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    stream = batches(dcfg)
+    losses = []
+    for _ in range(30):
+        b = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, m = step_fn(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05, losses
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg, model, params = _setup()
+    from repro.train.train_step import grads_fn
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8)
+    b = {k: jnp.asarray(v) for k, v in next(batches(dcfg)).items()}
+    l1, g1 = grads_fn(model, TrainConfig(microbatches=1))(params, b)
+    l2, g2 = grads_fn(model, TrainConfig(microbatches=4))(params, b)
+    assert abs(float(l1) - float(l2)) < 0.05
+    flat1, flat2 = jax.tree.leaves(g1), jax.tree.leaves(g2)
+    rel = max(float(jnp.abs(a.astype(jnp.float32)
+                            - b_.astype(jnp.float32)).max())
+              for a, b_ in zip(flat1, flat2))
+    assert rel < 0.1, rel
+
+
+def test_lr_schedule_shape():
+    c = AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(c, jnp.asarray(0))) < 1e-4
+    assert abs(float(lr_schedule(c, jnp.asarray(10))) - 1e-3) < 1e-4
+    assert float(lr_schedule(c, jnp.asarray(100))) < 2.1e-4
+
+
+def test_checkpoint_roundtrip_and_atomicity():
+    cfg, model, params = _setup()
+    opt = init_adamw(params)
+    with tempfile.TemporaryDirectory() as d:
+        assert latest_step(d) is None
+        save_checkpoint(d, 10, (params, opt))
+        save_checkpoint(d, 20, (params, opt))
+        # torn checkpoint (no COMMITTED) must be ignored
+        os.makedirs(os.path.join(d, "step_00000030"))
+        assert latest_step(d) == 20
+        (p2, o2), step = restore_checkpoint(d, (params, opt))
+        assert step == 20
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_stream_deterministic_resume():
+    dcfg = DataConfig(vocab=100, seq_len=16, global_batch=4)
+    s1 = batches(dcfg, start_step=0)
+    for _ in range(5):
+        next(s1)
+    b5 = next(s1)
+    b5_resumed = next(batches(dcfg, start_step=5))
+    np.testing.assert_array_equal(b5["tokens"], b5_resumed["tokens"])
+
+
+def test_fault_heartbeat_and_straggler():
+    hb = Heartbeat(num_hosts=4, timeout_steps=2)
+    for h in range(4):
+        hb.beat(h, 10)
+    hb.beat(0, 13)
+    hb.beat(1, 13)
+    hb.beat(2, 13)
+    assert hb.dead_hosts(13) == [3]
+
+    sp = StragglerPolicy(slow_factor=2.0, patience=2)
+    for step in range(3):
+        for h in range(4):
+            sp.observe(h, 1.0 if h != 2 else 5.0)
+        stragglers = sp.stragglers()
+    assert 2 in stragglers
+
+
+def test_elastic_remesh_preserves_tp():
+    em = ElasticMesh(total_hosts=512, tp_degree=16, hosts_per_pod=256)
+    m0 = em.next_mesh()
+    assert m0["model"] == 16
+    assert m0["pod"] * m0["data"] * m0["model"] == 512
+    em.fail(17)
+    m1 = em.next_mesh()
+    assert m1["model"] == 16
+    assert m1["pod"] * m1["data"] * m1["model"] == 256  # pow2 fallback
+    assert em.microbatch_scale(original_dp=32) == 2
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "mamba2-370m", "hymba-1.5b"])
+def test_serve_engine_continuous_batching(arch):
+    cfg, model, params = _setup(arch)
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, 4 + 3 * i,
+                                        dtype=np.int32),
+                    max_new_tokens=5)
+            for i in range(4)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion(max_steps=200)
+    for r in reqs:
+        assert r.done
+        assert len(r.out) == 5
+        assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+def test_serve_engine_matches_single_request_decode():
+    """A request decoded inside a mixed batch must equal its solo decode."""
+    cfg, model, params = _setup("granite-8b", seed=3)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 9)]
+
+    def solo(prompt):
+        cache = model.init_cache(1, 64)
+        logits, cache = model.prefill(
+            params, {"tokens": jnp.asarray(prompt)[None]}, cache)
+        out = [int(jnp.argmax(logits[0]))]
+        for i in range(3):
+            logits, cache = model.decode_step(
+                params, jnp.asarray([out[-1]]), cache, len(prompt) + i)
+            out.append(int(jnp.argmax(logits[0])))
+        return out
+
+    expected = [solo(p) for p in prompts]
+    engine = ServeEngine(model, params, slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion(max_steps=50)
+    for r, exp in zip(reqs, expected):
+        assert r.out == exp, (r.rid, r.out, exp)
