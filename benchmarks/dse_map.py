@@ -1,18 +1,24 @@
 """Paper Fig 5: isopower design-space maps (CNN-only / Transformer-only /
-mixed) + the paper's headline optima (66x32 / 20x128 / ~20-32x32)."""
+mixed) + the paper's headline optima (66x32 / 20x128 / ~20-32x32).
+
+Also reports the batched-vs-scalar engine comparison: the same mixed Fig-5
+grid through `sweep` (one analyze_batch call) and `sweep_scalar` (the
+original per-point Python loop), as a `dse/engine_speedup` CSV row.
+"""
 
 from __future__ import annotations
 
 import time
 
-from repro.core.dse import best_point, sweep
+from repro.core.dse import best_point, sweep, sweep_scalar
 from repro.core.workloads import dse_cnn_suite, dse_transformer_suite
+
+FIG5_ROWS = (8, 16, 20, 32, 48, 64, 66, 128, 256)
+FIG5_COLS = (8, 16, 32, 64, 128, 256)
 
 
 def bench() -> list[str]:
     lines = []
-    rows = (8, 16, 20, 32, 48, 64, 66, 128, 256)
-    cols = (8, 16, 32, 64, 128, 256)
     cnn = dse_cnn_suite()
     tfm = dse_transformer_suite()
     mixed = {**cnn, **tfm}
@@ -20,7 +26,7 @@ def bench() -> list[str]:
                                    ("transformer", tfm, "20x128"),
                                    ("mixed", mixed, "20x32..32x32")):
         t0 = time.time()
-        pts = sweep(suite, rows, cols)
+        pts = sweep(suite, FIG5_ROWS, FIG5_COLS)
         us = (time.time() - t0) * 1e6 / len(pts)
         best = best_point(pts)
         lines.append(
@@ -35,4 +41,19 @@ def bench() -> list[str]:
                     f"dse/{name}/{r}x{r},{us:.0f},"
                     f"eff={p.effective_tops_at_tdp:.1f};"
                     f"vs_best={p.effective_tops_at_tdp / max(1e-9, best.effective_tops_at_tdp):.2f}")
+
+    # engine comparison on the mixed Fig-5 grid: batched vs scalar wall time
+    t0 = time.time()
+    pts_b = sweep(mixed, FIG5_ROWS, FIG5_COLS)
+    t_batched = time.time() - t0
+    t0 = time.time()
+    pts_s = sweep_scalar(mixed, FIG5_ROWS, FIG5_COLS)
+    t_scalar = time.time() - t0
+    bb, bs = best_point(pts_b), best_point(pts_s)
+    agree = (bb.rows, bb.cols) == (bs.rows, bs.cols)
+    lines.append(
+        f"dse/engine_speedup,{t_batched * 1e6:.0f},"
+        f"scalar_ms={t_scalar * 1e3:.0f};batched_ms={t_batched * 1e3:.0f};"
+        f"speedup={t_scalar / max(1e-9, t_batched):.1f}x;"
+        f"best_agree={agree}")
     return lines

@@ -1,10 +1,17 @@
-"""Paper Table 2 + Fig 9: array granularity vs effective throughput @400W."""
+"""Paper Table 2 + Fig 9: array granularity vs effective throughput @400W.
+
+Table 2 goes through the batched `table2_rows` (one analyze_batch call over
+the six designs); Fig 9's per-model breakdown reads individual (design,
+workload) cells out of a single batched grid instead of looping
+evaluate_design per model.
+"""
 
 from __future__ import annotations
 
 import time
 
-from repro.core.dse import evaluate_design, table2_rows
+from repro.core.dse import build_design_vector, table2_rows
+from repro.core.simulator import analyze_batch, pack_workloads
 from repro.core.workloads import full_suite
 
 PAPER_TABLE2 = {  # (rows, cols) -> (util, effective TOPS @400W)
@@ -29,13 +36,18 @@ def bench() -> list[str]:
             f"paper_eff={pe};paper_util={pu}")
     lines.append(f"granularity/best,{dt_us:.0f},"
                  f"{best.rows}x{best.cols}_eff={best.effective_tops_at_tdp:.1f}")
-    # Fig 9: per-model breakdown at the paper's two headline points
-    for name, gemms in suite.items():
-        e32 = evaluate_design(32, 32, {name: gemms}, num_pods=256)
-        e128 = evaluate_design(128, 128, {name: gemms}, num_pods=32)
+    # Fig 9: per-model breakdown at the paper's two headline points — one
+    # batched (2 designs x 10 models) grid, per-cell reads
+    t0 = time.time()
+    packed = pack_workloads(suite)
+    batch = analyze_batch(packed, build_design_vector(
+        [(32, 32, "butterfly-2", 256), (128, 128, "butterfly-2", 32)]))
+    dt_us = (time.time() - t0) * 1e6 / (2 * len(batch.names))  # per cell
+    for w, name in enumerate(batch.names):
+        e32 = float(batch.effective_tops_at_tdp[0, w])
+        e128 = float(batch.effective_tops_at_tdp[1, w])
         lines.append(
             f"granularity/fig9/{name},{dt_us:.0f},"
-            f"eff32x32={e32.effective_tops_at_tdp:.1f};"
-            f"eff128x128={e128.effective_tops_at_tdp:.1f};"
-            f"ratio={e32.effective_tops_at_tdp / max(1e-9, e128.effective_tops_at_tdp):.2f}")
+            f"eff32x32={e32:.1f};eff128x128={e128:.1f};"
+            f"ratio={e32 / max(1e-9, e128):.2f}")
     return lines

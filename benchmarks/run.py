@@ -2,6 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--only granularity,...]
+
+The ``dse`` suite emits a ``dse/engine_speedup`` row comparing the batched
+analytical engine (core.dse.sweep -> simulator.analyze_batch) against the
+original scalar loop (core.dse.sweep_scalar) on the Fig-5 mixed grid.
 """
 
 from __future__ import annotations

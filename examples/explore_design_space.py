@@ -1,13 +1,22 @@
 """Example: reproduce the paper's design-space exploration (Fig 5 / Table 2)
 and print an ASCII effective-throughput/W heatmap.
 
-    PYTHONPATH=src python examples/explore_design_space.py
+The sweep runs through the batched analytical engine (core.dse.sweep ->
+simulator.analyze_batch): the whole (rows x cols x workload) grid is one
+NumPy evaluation. Pass --scalar to use the original per-point loop and see
+the wall-time difference.
+
+    PYTHONPATH=src python examples/explore_design_space.py [--scalar]
 """
 
-from repro.core.dse import best_point, evaluate_design, sweep, table2_rows
+import sys
+import time
+
+from repro.core.dse import best_point, sweep, sweep_scalar, table2_rows
 from repro.core.workloads import full_suite
 
 suite = full_suite(batch=1)
+use_scalar = "--scalar" in sys.argv[1:]
 
 print("=== Table 2 (effective throughput @ 400 W) ===")
 print(f"{'design':>10} {'pods':>5} {'peak':>6} {'util':>6} {'effective':>9}")
@@ -18,10 +27,14 @@ for p in table2_rows(suite):
 
 rows = (8, 16, 32, 64, 128, 256)
 cols = (8, 16, 32, 64, 128, 256)
-pts = sweep(suite, rows, cols)
+t0 = time.time()
+pts = (sweep_scalar if use_scalar else sweep)(suite, rows, cols)
+dt = time.time() - t0
 best = best_point(pts)
+engine = "scalar loop" if use_scalar else "batched engine"
 print(f"\n=== Fig 5c heatmap (mixed suite), best {best.rows}x{best.cols} "
-      f"@ {best.effective_tops_at_tdp:.0f} TOPS ===")
+      f"@ {best.effective_tops_at_tdp:.0f} TOPS "
+      f"[{len(pts)} points in {dt * 1e3:.0f} ms, {engine}] ===")
 grid = {(p.rows, p.cols): p.effective_tops_at_tdp for p in pts}
 mx = max(grid.values())
 shades = " .:-=+*#%@"

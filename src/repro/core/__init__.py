@@ -7,13 +7,19 @@ from .interconnect import (ButterflyRouter, IcnSpec, benes_spec,
                            butterfly_spec, crossbar_spec, htree_spec,
                            make_router, mesh_spec)
 from .scheduler import Schedule, SliceScheduler
-from .simulator import SimResult, analyze, merge_workloads, simulate
-from .tiling import GemmSpec, TileOp, TileOpGraph, tile_gemm, tile_workload
+from .simulator import (BatchedAnalysis, DesignVector, PackedWorkloads,
+                        SimResult, analyze, analyze_batch, analyze_scalar,
+                        merge_workloads, pack_workloads, simulate)
+from .tiling import (GemmSpec, TileOp, TileOpGraph, TileStats, gemm_levels,
+                     tile_counts, tile_gemm, tile_stats, tile_workload)
 
 __all__ = [
     "AcceleratorConfig", "ArrayConfig", "max_pods_under_tdp", "monolithic",
     "sosa", "ButterflyRouter", "IcnSpec", "benes_spec", "butterfly_spec",
     "crossbar_spec", "htree_spec", "make_router", "mesh_spec", "Schedule",
-    "SliceScheduler", "SimResult", "analyze", "merge_workloads", "simulate",
-    "GemmSpec", "TileOp", "TileOpGraph", "tile_gemm", "tile_workload",
+    "SliceScheduler", "SimResult", "analyze", "analyze_scalar",
+    "analyze_batch", "BatchedAnalysis", "DesignVector", "PackedWorkloads",
+    "pack_workloads", "merge_workloads", "simulate",
+    "GemmSpec", "TileOp", "TileOpGraph", "TileStats", "gemm_levels",
+    "tile_counts", "tile_gemm", "tile_stats", "tile_workload",
 ]

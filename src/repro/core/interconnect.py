@@ -20,6 +20,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 # Calibration: Table 1 (N = 256 pods).
 #   Butterfly-1: log2(256) = 8 stages  -> 0.23 mW/B  => ~0.0288 mW/B/stage
 #   Benes: 2*log2(256)-1 = 15 stages, + copy network (multicast, [38])
@@ -201,6 +203,36 @@ def htree_spec(n: int, replication: int = 1) -> IcnSpec:
         full_permutation=False,
         multicast=True,
     )
+
+
+def _floor_log2(n: np.ndarray) -> np.ndarray:
+    """Exact floor(log2(n)) for positive int64 arrays (via frexp)."""
+    _, e = np.frexp(np.asarray(n, dtype=np.int64).astype(np.float64))
+    return (e - 1).astype(np.int64)
+
+
+def icn_stage_mw_arrays(name: str, ports: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(stages, mW/byte-per-cycle) for one topology over an array of port
+    counts — the vectorized counterpart of the *_spec constructors above,
+    used by the batched DSE engine. Matches them element-for-element."""
+    ports = np.asarray(ports, dtype=np.int64)
+    if name.startswith("butterfly"):
+        k = int(name.split("-")[1]) if "-" in name else 1
+        stages = _floor_log2(ports)
+        return stages, E_SW_MW_PER_BYTE_STAGE * stages * k
+    if name == "benes":
+        stages = (2 * _floor_log2(ports) - 1) + _floor_log2(ports)
+        return stages, E_SW_MW_PER_BYTE_STAGE * BENES_STAGE_FACTOR * stages
+    if name == "crossbar":
+        stages = np.full_like(ports, 2)
+        return stages, CROSSBAR_MW_PER_BYTE_AT_256 * (ports / 256.0)
+    if name == "mesh":
+        side = np.ceil(np.sqrt(ports)).astype(np.int64)
+        return side, E_SW_MW_PER_BYTE_STAGE * 2 * side
+    if name == "htree":  # 'htree-k' is rejected, as in the scalar path
+        stages = 2 * _floor_log2(ports)
+        return stages, E_SW_MW_PER_BYTE_STAGE * stages.astype(np.float64)
+    raise ValueError(f"unknown interconnect: {name}")
 
 
 class IdealRouter:

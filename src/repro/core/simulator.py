@@ -1,19 +1,31 @@
 """SOSA performance/energy simulator.
 
-Two evaluation paths over the same tiling model:
+Three evaluation paths over the same tiling model:
 
-  * `simulate(...)`  — slice-accurate: runs the real offline scheduler
+  * `simulate(...)`      — slice-accurate: runs the real offline scheduler
     (core/scheduler.py) with the functional Butterfly-k router, bank ports
     and RAW chains, then reduces the schedule to cycles / utilization /
     effective throughput / energy. This is the paper's own methodology
     (their artifact is a cycle-accurate simulator driven by a compiler).
 
-  * `analyze(...)`   — analytical: closed-form wave model of the same
+  * `analyze(...)`       — analytical: closed-form wave model of the same
     tiling, used for the Fig-5 design-space sweeps where running the full
     scheduler for every (r, c) point would be needlessly slow. Validated
-    against `simulate` in tests (tests/test_simulator.py).
+    against `simulate` in tests (tests/test_simulator.py). Since the
+    batched engine landed this is a thin single-point wrapper around
+    `analyze_batch`; the original pure-Python closed form survives as
+    `analyze_scalar` and serves as the property-test oracle
+    (tests/test_dse_batch.py).
 
-Both report the paper's headline metric, effective throughput @ TDP
+  * `analyze_batch(...)` — the batched DSE engine: the same wave model as
+    array-shaped NumPy over an entire design grid x workload suite at
+    once. Workloads are packed into flat per-GEMM arrays
+    (`pack_workloads`), hardware points into a `DesignVector`, and every
+    (point, workload) metric falls out of one broadcasted evaluation —
+    no per-point Python, which is what makes the Fig-5 grid ~2 orders of
+    magnitude faster than the scalar loop.
+
+All report the paper's headline metric, effective throughput @ TDP
 (= isopower peak throughput x utilization, Table 2).
 
 Interconnect latency exposure (Table 1 'cycles per tile op'): a slice's
@@ -30,12 +42,15 @@ import dataclasses
 import math
 from collections import defaultdict
 
+import numpy as np
+
 from .arrays import (ACT_BYTES, E_MAC_PJ, E_SRAM_PJ_PER_BYTE, OPS_PER_MAC,
                      PSUM_BYTES, WEIGHT_BYTES, AcceleratorConfig)
 from .interconnect import (benes_spec, butterfly_spec, crossbar_spec,
                            htree_spec, mesh_spec)
 from .scheduler import SliceScheduler
-from .tiling import GemmSpec, TileOpGraph, tile_workload
+from .tiling import (GemmSpec, TileOpGraph, gemm_levels, tile_counts,
+                     tile_workload)
 
 
 def icn_spec_for(name: str, ports: int):
@@ -154,35 +169,34 @@ _ICN_EFFICIENCY = {
 
 
 def _levels(gemms: list[GemmSpec]) -> list[list[GemmSpec]]:
-    """Group layers into topological levels (parallel branches share one)."""
-    depth: dict[int, int] = {}
-    by_id = {g.gemm_id: g for g in gemms}
-    order = sorted(gemms, key=lambda g: g.gemm_id)
-    for g in order:
-        d = 0
-        for pid in g.depends_on:
-            if pid in depth:
-                d = max(d, depth[pid] + 1)
-        depth[g.gemm_id] = d
+    """Group layers into topological levels (parallel branches share one).
+
+    Thin wrapper over tiling.gemm_levels — one leveling rule for the
+    scalar oracle, the batched engine, and the memory-sweep benchmark."""
+    depth = gemm_levels(gemms)
     lv: dict[int, list[GemmSpec]] = defaultdict(list)
-    for g in order:
-        lv[depth[g.gemm_id]].append(g)
+    for i in sorted(range(len(gemms)), key=lambda i: gemms[i].gemm_id):
+        lv[int(depth[i])].append(gemms[i])
     return [lv[i] for i in sorted(lv)]
 
 
-def analyze(
+def analyze_scalar(
     gemms: list[GemmSpec],
     accel: AcceleratorConfig,
     interconnect: str = "butterfly-2",
     k_part: int | None = None,
     name: str = "",
 ) -> SimResult:
-    """Closed-form wave model of the tiled schedule.
+    """Closed-form wave model of the tiled schedule (pure-Python reference).
 
     Per level: every GEMM contributes ceil(d1/k)*ceil(d3/c) independent
     psum chains of length ceil(d2/r). Chains from all GEMMs of the level
     run concurrently in waves of `pods` (scaled by the fabric's busy-pod
     efficiency); the level cannot finish faster than its longest chain.
+
+    This is the original scalar implementation, kept verbatim as the
+    independent oracle for the batched engine (`analyze_batch`); use
+    `analyze` for single points — it routes through the batched engine.
     """
     arr = accel.array
     r, c = arr.rows, arr.cols
@@ -218,7 +232,6 @@ def analyze(
     spec = icn_spec_for(interconnect, max(2, accel.num_pods))
     e_pj = 0.0
     for g in gemms:
-        kpg = max(1, min(kp, g.d1))
         n_j = math.ceil(g.d2 / r)
         e_pj += g.macs * E_MAC_PJ
         e_pj += g.d1 * g.d2 * ACT_BYTES * (E_SRAM_PJ_PER_BYTE + spec.mw_per_byte)
@@ -244,6 +257,276 @@ def analyze(
         num_tile_ops=total_tiles,
         num_slices=int(total_slices),
     )
+
+
+# ---------------------------------------------------------------------------
+# batched DSE engine: the wave model as array-shaped NumPy over a whole
+# (design point x workload) grid in one call
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedWorkloads:
+    """A workload suite flattened into per-GEMM arrays for batched analysis.
+
+    GEMMs are sorted by (workload, level) so both the per-level wave
+    reduction and the per-workload totals are contiguous-segment reductions
+    (np.ufunc.reduceat) — no Python per-GEMM loop anywhere downstream.
+    """
+
+    names: tuple[str, ...]
+    d1: np.ndarray             # (G,) int64, G = total GEMMs across workloads
+    d2: np.ndarray
+    d3: np.ndarray
+    macs: np.ndarray           # (G,) d1*d2*d3
+    seg_starts: np.ndarray     # (S,) first GEMM of each (workload, level)
+    wl_seg_starts: np.ndarray  # (W,) first segment of each workload
+    wl_gemm_starts: np.ndarray  # (W,) first GEMM of each workload
+
+    @property
+    def num_workloads(self) -> int:
+        return len(self.names)
+
+
+def pack_workloads(
+    workloads: dict[str, list[GemmSpec]] | list[list[GemmSpec]],
+) -> PackedWorkloads:
+    """Flatten a workload suite into reduceat-ready arrays (see above)."""
+    if isinstance(workloads, dict):
+        items = list(workloads.items())
+    else:
+        items = [(f"wl{i}", wl) for i, wl in enumerate(workloads)]
+    if not items or any(not wl for _, wl in items):
+        raise ValueError("pack_workloads needs at least one non-empty workload")
+
+    names: list[str] = []
+    d1: list[np.ndarray] = []
+    d2: list[np.ndarray] = []
+    d3: list[np.ndarray] = []
+    seg_starts: list[int] = []
+    wl_seg_starts: list[int] = []
+    wl_gemm_starts: list[int] = []
+    g_off = 0
+    for name, wl in items:
+        names.append(name)
+        lv = gemm_levels(wl)
+        order = np.argsort(lv, kind="stable")
+        lv = lv[order]
+        d1.append(np.array([wl[i].d1 for i in order], dtype=np.int64))
+        d2.append(np.array([wl[i].d2 for i in order], dtype=np.int64))
+        d3.append(np.array([wl[i].d3 for i in order], dtype=np.int64))
+        wl_seg_starts.append(len(seg_starts))
+        wl_gemm_starts.append(g_off)
+        # level-segment boundaries within this workload
+        bounds = np.flatnonzero(np.r_[True, lv[1:] != lv[:-1]]) + g_off
+        seg_starts.extend(bounds.tolist())
+        g_off += len(wl)
+
+    d1a = np.concatenate(d1)
+    d2a = np.concatenate(d2)
+    d3a = np.concatenate(d3)
+    return PackedWorkloads(
+        names=tuple(names), d1=d1a, d2=d2a, d3=d3a, macs=d1a * d2a * d3a,
+        seg_starts=np.asarray(seg_starts, dtype=np.int64),
+        wl_seg_starts=np.asarray(wl_seg_starts, dtype=np.int64),
+        wl_gemm_starts=np.asarray(wl_gemm_starts, dtype=np.int64),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignVector:
+    """Per-design-point hardware quantities, shape (P,) each — everything
+    the wave model needs, with the interconnect spec already resolved."""
+
+    rows: np.ndarray               # int64
+    cols: np.ndarray
+    num_pods: np.ndarray
+    pipeline_latency: np.ndarray   # int64, fill/drain cycles
+    peak_ops_at_tdp: np.ndarray    # float64, ops/s isopower-normalized
+    icn_stages: np.ndarray         # int64, one-way traversal depth
+    icn_energy_mw: np.ndarray      # float64, spec mW/B for the energy model
+    icn_eff: np.ndarray            # float64, busy-pod efficiency (Table 1)
+    clock_hz: float = 1e9
+
+    @property
+    def num_points(self) -> int:
+        return len(self.rows)
+
+    def repeat(self, n: int) -> "DesignVector":
+        """The same design point replicated n times (e.g. to sweep a
+        per-point parameter like k_part over fixed hardware)."""
+        return DesignVector(
+            rows=np.repeat(self.rows, n), cols=np.repeat(self.cols, n),
+            num_pods=np.repeat(self.num_pods, n),
+            pipeline_latency=np.repeat(self.pipeline_latency, n),
+            peak_ops_at_tdp=np.repeat(self.peak_ops_at_tdp, n),
+            icn_stages=np.repeat(self.icn_stages, n),
+            icn_energy_mw=np.repeat(self.icn_energy_mw, n),
+            icn_eff=np.repeat(self.icn_eff, n),
+            clock_hz=self.clock_hz,
+        )
+
+    @classmethod
+    def from_accel(cls, accel: AcceleratorConfig,
+                   interconnect: str = "butterfly-2") -> "DesignVector":
+        """Single-point vector from a config object (exact scalar specs)."""
+        arr = accel.array
+        spec = icn_spec_for(interconnect, max(2, accel.num_pods))
+        as1 = lambda v, dt: np.asarray([v], dtype=dt)  # noqa: E731
+        return cls(
+            rows=as1(arr.rows, np.int64), cols=as1(arr.cols, np.int64),
+            num_pods=as1(accel.num_pods, np.int64),
+            pipeline_latency=as1(arr.pipeline_latency, np.int64),
+            peak_ops_at_tdp=as1(accel.peak_ops_at_tdp, np.float64),
+            icn_stages=as1(spec.stages, np.int64),
+            icn_energy_mw=as1(spec.mw_per_byte, np.float64),
+            icn_eff=as1(_ICN_EFFICIENCY.get(interconnect, 1.0), np.float64),
+            clock_hz=arr.clock_hz,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedAnalysis:
+    """`analyze` over a (P design points x W workloads) grid; every metric
+    array is shaped (P, W) unless noted."""
+
+    names: tuple[str, ...]
+    design: DesignVector
+    total_macs: np.ndarray             # (W,)
+    total_cycles: np.ndarray           # float; int-truncated on materialize
+    num_slices: np.ndarray
+    num_tile_ops: np.ndarray
+    utilization: np.ndarray
+    busy_pods: np.ndarray
+    cycles_per_tile: np.ndarray
+    effective_tops_at_tdp: np.ndarray
+    peak_tops_at_tdp: np.ndarray       # (P,)
+    energy_joules: np.ndarray
+    avg_power_watts: np.ndarray
+
+    @property
+    def effective_tops_per_watt(self) -> np.ndarray:
+        """(P, W), same int-cycle truncation as SimResult's property."""
+        cyc = np.maximum(1.0, np.floor(self.total_cycles))
+        macs_per_s = self.total_macs[None, :] / (cyc / 1e9)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = macs_per_s * OPS_PER_MAC / 1e12 / self.avg_power_watts
+        return np.where(self.avg_power_watts > 0, out, 0.0)
+
+    def result(self, p: int, w: int = 0, name: str | None = None) -> SimResult:
+        """Materialize one grid cell as a scalar SimResult."""
+        return SimResult(
+            name=self.names[w] if name is None else name,
+            total_macs=int(self.total_macs[w]),
+            total_cycles=int(self.total_cycles[p, w]),
+            num_pods=int(self.design.num_pods[p]),
+            utilization=float(self.utilization[p, w]),
+            busy_pods=float(self.busy_pods[p, w]),
+            cycles_per_tile=float(self.cycles_per_tile[p, w]),
+            effective_tops_at_tdp=float(self.effective_tops_at_tdp[p, w]),
+            peak_tops_at_tdp=float(self.peak_tops_at_tdp[p]),
+            energy_joules=float(self.energy_joules[p, w]),
+            avg_power_watts=float(self.avg_power_watts[p, w]),
+            num_tile_ops=int(self.num_tile_ops[p, w]),
+            num_slices=int(self.num_slices[p, w]),
+        )
+
+
+def analyze_batch(
+    packed: PackedWorkloads,
+    design: DesignVector,
+    k_part: int | np.ndarray | None = None,
+) -> BatchedAnalysis:
+    """The closed-form wave model, broadcast over the full grid.
+
+    Shapes: P design points, G GEMMs (all workloads concatenated),
+    S (workload, level) segments, W workloads. The per-GEMM intermediates
+    are (P, G); reduceat folds them to (P, S) level waves and then (P, W)
+    workload totals. `k_part` may be a scalar (applied everywhere), an
+    array of shape (P,) (per-point activation partition — used by the
+    tiling sweep), or None for the paper's k = rows rule.
+    """
+    d1, d2, d3 = packed.d1[None, :], packed.d2[None, :], packed.d3[None, :]
+    r = design.rows[:, None]
+    c = design.cols[:, None]
+
+    if k_part is None:
+        kp = r
+    else:
+        kp = np.asarray(k_part, dtype=np.int64)
+        # scalar -> everywhere; (P,)/(P,1) -> per design point
+        kp = kp.reshape(1, 1) if kp.ndim == 0 else kp.reshape(-1, 1)
+    n_i, n_j, n_l = tile_counts(d1, d2, d3, r, c, kp)
+    tiles = n_i * n_j * n_l                      # (P, G)
+
+    # wave count per (workload, level) segment: waves of eff_pods concurrent
+    # chains, floored by the longest RAW chain of the level
+    eff_pods = (design.num_pods * design.icn_eff)[:, None]
+    pod_slices = np.add.reduceat(tiles, packed.seg_starts, axis=1)
+    crit = np.maximum.reduceat(n_j, packed.seg_starts, axis=1)
+    level_slices = np.maximum(crit, pod_slices / eff_pods)   # (P, S)
+
+    ws = packed.wl_seg_starts
+    wg = packed.wl_gemm_starts
+    total_slices = np.add.reduceat(level_slices, ws, axis=1)  # (P, W)
+    total_tiles = np.add.reduceat(tiles, wg, axis=1)
+    k_sum = np.add.reduceat(tiles * (d1 / n_i), wg, axis=1)
+    total_macs = np.add.reduceat(packed.macs, wg)             # (W,)
+
+    # slice service time: streaming + fill/drain + exposed interconnect
+    k_bar = k_sum / total_tiles
+    stream = np.maximum(k_bar, r)
+    exposed = np.maximum(0.0, 2 * design.icn_stages[:, None] - stream)
+    slice_cyc = stream + design.pipeline_latency[:, None] + exposed  # (P, W)
+
+    total_cycles = total_slices * slice_cyc
+    num_pe = (design.rows * design.cols * design.num_pods)[:, None]
+    util = total_macs[None, :] / (num_pe * total_cycles)
+    busy = np.minimum(1.0, total_tiles / (total_slices * design.num_pods[:, None]))
+
+    # energy: same accounting as analyze_scalar, in one (P, G) pass
+    e_per_b = E_SRAM_PJ_PER_BYTE + design.icn_energy_mw[:, None]
+    e_pj = (
+        packed.macs[None, :] * E_MAC_PJ
+        + (d1 * d2 * ACT_BYTES + d2 * d3 * WEIGHT_BYTES) * e_per_b
+        + d1 * d3 * PSUM_BYTES * (2 * n_j - 1) * e_per_b
+    )
+    energy = np.add.reduceat(e_pj, wg, axis=1) * 1e-12        # (P, W) joules
+    t = total_cycles / design.clock_hz
+    power = energy / t
+
+    return BatchedAnalysis(
+        names=packed.names,
+        design=design,
+        total_macs=total_macs,
+        total_cycles=total_cycles,
+        num_slices=total_slices.astype(np.int64),
+        num_tile_ops=total_tiles,
+        utilization=util,
+        busy_pods=busy,
+        cycles_per_tile=slice_cyc,
+        effective_tops_at_tdp=design.peak_ops_at_tdp[:, None] * util / 1e12,
+        peak_tops_at_tdp=design.peak_ops_at_tdp / 1e12,
+        energy_joules=energy,
+        avg_power_watts=power,
+    )
+
+
+def analyze(
+    gemms: list[GemmSpec],
+    accel: AcceleratorConfig,
+    interconnect: str = "butterfly-2",
+    k_part: int | None = None,
+    name: str = "",
+) -> SimResult:
+    """Closed-form wave model of the tiled schedule (see `analyze_scalar`
+    for the math) — thin single-point wrapper over the batched engine."""
+    if not gemms:
+        return analyze_scalar(gemms, accel, interconnect, k_part, name)
+    packed = pack_workloads({name or "workload": gemms})
+    design = DesignVector.from_accel(accel, interconnect)
+    batch = analyze_batch(packed, design, k_part=k_part)
+    return batch.result(0, 0, name=name)
 
 
 def merge_workloads(*workloads: list[GemmSpec]) -> list[GemmSpec]:

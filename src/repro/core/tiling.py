@@ -22,7 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import defaultdict
 from typing import Iterator
+
+import numpy as np
 
 from .arrays import ArrayConfig
 
@@ -204,3 +207,119 @@ def tile_workload(
         )
         oid += len(g.ops)
     return TileOpGraph(ops=all_ops, num_banks=num_banks, final_tiles=final)
+
+
+# ---------------------------------------------------------------------------
+# tile statistics fast path (no TileOp materialization)
+# ---------------------------------------------------------------------------
+#
+# The DSE sweeps only need *counts* out of the tiling — how many tile ops a
+# GEMM produces, the RAW-chain depth along the contraction, and the mean
+# streamed activation rows k̄ — all of which are closed-form in (d1, d2, d3)
+# and the array shape. `tile_stats` computes them as NumPy arrays over a
+# whole workload at once; `gemm_levels` gives the topological level of each
+# GEMM (parallel branches share a level), which is the schedule's outer
+# barrier structure in the analytical wave model (simulator.analyze).
+
+
+def gemm_levels(gemms: list[GemmSpec]) -> np.ndarray:
+    """Topological level per GEMM, aligned with `gemms` order.
+
+    Same rule as the offline scheduler's layer-by-layer barriers: a GEMM
+    sits one level past its deepest producer; GEMMs with no producer/consumer
+    relation (parallel branches, multi-tenant streams) share a level.
+    Producers are resolved in gemm_id order; dangling ids are ignored.
+    """
+    depth: dict[int, int] = {}
+    for g in sorted(gemms, key=lambda g: g.gemm_id):
+        d = 0
+        for pid in g.depends_on:
+            if pid in depth:
+                d = max(d, depth[pid] + 1)
+        depth[g.gemm_id] = d
+    return np.array([depth[g.gemm_id] for g in gemms], dtype=np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileStats:
+    """Per-GEMM tile counts for one workload on one array shape.
+
+    All fields are int64/float64 arrays of length len(gemms), in the same
+    order as the input workload.
+    """
+
+    d1: np.ndarray
+    d2: np.ndarray
+    d3: np.ndarray
+    macs: np.ndarray      # d1*d2*d3
+    level: np.ndarray     # topological level (gemm_levels)
+    n_i: np.ndarray       # activation chunks  ceil(d1/k_part)
+    n_j: np.ndarray       # RAW psum-chain depth  ceil(d2/rows)
+    n_l: np.ndarray       # weight column chunks  ceil(d3/cols)
+    tiles: np.ndarray     # n_i * n_j * n_l
+    k_eff: np.ndarray     # mean streamed rows per tile of this GEMM, d1/n_i
+
+    @property
+    def total_tiles(self) -> int:
+        return int(self.tiles.sum())
+
+    @property
+    def total_macs(self) -> int:
+        return int(self.macs.sum())
+
+    @property
+    def k_bar(self) -> float:
+        """Tile-weighted mean activation rows streamed per tile op."""
+        t = self.tiles.sum()
+        return float((self.tiles * self.k_eff).sum() / t) if t else 0.0
+
+    @property
+    def max_chain(self) -> int:
+        """Longest RAW psum chain in the workload (critical path, tiles)."""
+        return int(self.n_j.max()) if len(self.n_j) else 0
+
+    @property
+    def parallel_frontier(self) -> int:
+        """Tile ops with no intra-workload dependency available at t=0
+        (first-level GEMMs' first chain links): sum of n_i*n_l there."""
+        if not len(self.level):
+            return 0
+        first = self.level == self.level.min()
+        return int((self.n_i[first] * self.n_l[first]).sum())
+
+
+def tile_counts(d1, d2, d3, rows, cols, k_part=None):
+    """`tile_gemm`'s chunk counts (n_i, n_j, n_l) as a broadcast-friendly
+    closed form: same k_part clipping (the paper's r x r rule when k_part
+    is None), same ceil divisions. All args may be NumPy arrays of any
+    mutually broadcastable shapes — the single source of the formula for
+    both `tile_stats` and the batched engine (simulator.analyze_batch)."""
+    kp = rows if k_part is None else k_part
+    kpg = np.maximum(1, np.minimum(kp, d1))
+    n_i = -(-d1 // kpg)
+    n_j = -(-d2 // rows)
+    n_l = -(-d3 // cols)
+    return n_i, n_j, n_l
+
+
+def tile_stats(
+    gemms: list[GemmSpec],
+    array: ArrayConfig,
+    k_part: int | None = None,
+) -> TileStats:
+    """Closed-form tile counts for `tile_gemm`'s partitioning, vectorized
+    over a workload — verified property-based against the materializing
+    tiler in tests/test_dse_batch.py.
+    """
+    d1 = np.array([g.d1 for g in gemms], dtype=np.int64)
+    d2 = np.array([g.d2 for g in gemms], dtype=np.int64)
+    d3 = np.array([g.d3 for g in gemms], dtype=np.int64)
+    n_i, n_j, n_l = tile_counts(d1, d2, d3, array.rows, array.cols, k_part)
+    return TileStats(
+        d1=d1, d2=d2, d3=d3,
+        macs=d1 * d2 * d3,
+        level=gemm_levels(gemms),
+        n_i=n_i, n_j=n_j, n_l=n_l,
+        tiles=n_i * n_j * n_l,
+        k_eff=d1 / n_i,
+    )

@@ -30,7 +30,10 @@ from jax.experimental.shard_map import shard_map
 
 
 def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+    # jax.lax.axis_size only exists in newer jax; psum(1) works everywhere.
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return int(jax.lax.psum(1, axis_name))
 
 
 def butterfly_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:

@@ -55,8 +55,11 @@ def make_grad_sync(mesh: Mesh, axis: str = "pod", impl: str = "psum"):
     """Returns sync(grads, error) -> (reduced_grads, new_error).
 
     grads must be replicated along `axis` up to the missing sum (i.e. each
-    pod holds its local-batch gradient); other axes' sharding is preserved
-    by flattening per-shard (the reducer runs pointwise per shard).
+    pod holds its local-batch gradient). The flattened gradient vector is
+    REPLICATED on every device while reducing (P(None) specs): sharding it
+    over the non-reduction axes miscompiles on jax<=0.4.37 (see the spec
+    comment below), so each device temporarily materializes the full fp32
+    flat vector — budget memory accordingly on large models.
     `error` is the error-feedback carry for "compressed" (None otherwise).
     """
     if axis not in mesh.shape:
@@ -84,9 +87,13 @@ def make_grad_sync(mesh: Mesh, axis: str = "pod", impl: str = "psum"):
         if error is None and impl == "compressed":
             error = jnp.zeros_like(flat)
 
-        other_axes = tuple(a for a in mesh.axis_names if a != axis)
-        spec = P(other_axes if len(other_axes) > 1 else
-                 (other_axes[0] if other_axes else None))
+        # The reducer sees the full flat vector on every device (P(None)):
+        # sharding it over the non-reduction axes (P(other_axes)) miscompiles
+        # under jit on jax<=0.4.37 — a concatenate feeding shard_map with
+        # check_rep=False loses the pod-replication guarantee and the psum
+        # over-reduces (2x/4x too large). Replication is always correct;
+        # data-parallel grads are replicated along `axis` by construction.
+        spec = P(None)
 
         @functools.partial(
             shard_map, mesh=mesh,
@@ -97,20 +104,10 @@ def make_grad_sync(mesh: Mesh, axis: str = "pod", impl: str = "psum"):
             r, ne = red(x, e if error is not None else None)
             return r, (ne if ne is not None else jnp.zeros((), x.dtype))
 
-        # pad so the flat vector divides the non-reduction shards
-        import math
-        denom = math.prod(mesh.shape[a] for a in other_axes) or 1
-        pad = (-flat.shape[0]) % denom
-        if pad:
-            flat = jnp.pad(flat, (0, pad))
-            if error is not None:
-                error = jnp.pad(error, (0, pad))
+        # no padding needed: the replicated spec places the whole vector on
+        # every device, so there is no shard-divisibility constraint
         red_flat, new_error = run(flat, error if error is not None else
                                   jnp.zeros((), flat.dtype))
-        if pad:
-            red_flat = red_flat[:-pad]
-            if error is not None:
-                new_error = new_error[:-pad]
         return _unflatten_grads(red_flat, shapes, treedef), \
             (new_error if error is not None else None)
 

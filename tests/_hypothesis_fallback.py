@@ -1,0 +1,118 @@
+"""Deterministic fallback for the subset of `hypothesis` the tests use.
+
+The container image does not ship `hypothesis`, and the test suite must not
+silently lose its property tests when it is absent.  This module implements
+just enough of the API — `given`, `settings`, and the strategies the suite
+draws from (`integers`, `sampled_from`, `booleans`, `permutations`) — to run
+each property test over a fixed number of pseudo-random samples seeded from
+the test's name, so failures are reproducible.
+
+Test modules import it as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_fallback import given, settings, st
+
+When the real `hypothesis` is installed it wins, and this module is unused.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    """A strategy is just a draw function: rng -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _permutations(values) -> _Strategy:
+    pool = list(values)
+    return _Strategy(lambda rng: rng.sample(pool, len(pool)))
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(
+        lambda rng: [elements.draw(rng)
+                     for _ in range(rng.randint(min_size, max_size))])
+
+
+st = types.SimpleNamespace(
+    integers=_integers,
+    sampled_from=_sampled_from,
+    booleans=_booleans,
+    permutations=_permutations,
+    floats=_floats,
+    lists=_lists,
+)
+strategies = st
+
+_DEFAULT_EXAMPLES = 10
+_MAX_EXAMPLES_CAP = 30  # keep the fallback fast; hypothesis shrinks, we can't
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+    """Records max_examples; all other hypothesis settings are no-ops here."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            n = min(n, _MAX_EXAMPLES_CAP)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                pos = [s.draw(rng) for s in arg_strategies]
+                kw = {name: s.draw(rng) for name, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kw)
+
+        # `@settings` may be applied above `@given`; it then tags the wrapper,
+        # which is why max_examples is read off `wrapper` at call time.
+        #
+        # Hide the strategy-filled parameters from pytest (it would otherwise
+        # look for fixtures named after them): expose only the leftover
+        # params, like hypothesis does. Positional strategies fill the
+        # rightmost positional parameters.
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[:-len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

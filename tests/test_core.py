@@ -6,7 +6,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # degrade gracefully: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (AcceleratorConfig, ArrayConfig, ButterflyRouter,
                         GemmSpec, SliceScheduler, analyze, benes_spec,

@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # degrade gracefully: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import MoEConfig

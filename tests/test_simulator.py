@@ -1,0 +1,101 @@
+"""The analyze <-> simulate cross-check promised by core/simulator.py and
+core/dse.py: the analytical wave model (the engine behind every Fig-5/Table-2
+sweep) against the slice-accurate scheduler on selected Table-2 design
+points.
+
+Tolerance bands are calibrated per workload family: the wave model tracks
+the scheduler within ~10% on CNN traces; on BERT traces it is optimistic by
+up to ~1.55x (the scheduler pays real bank/routing conflicts on the
+attention-head fan-out that the level-barrier closed form does not model).
+A monolithic array (1 pod, no interconnect contention) must agree almost
+exactly — there the wave model IS the schedule.
+"""
+
+import pytest
+
+from repro.core.arrays import AcceleratorConfig, ArrayConfig
+from repro.core.simulator import analyze, simulate
+from repro.core.workloads import bert, resnet
+
+
+def _accel(rows: int, cols: int, pods: int) -> AcceleratorConfig:
+    return AcceleratorConfig(array=ArrayConfig(rows, cols), num_pods=pods,
+                             icn_mw_per_byte=0.52 if pods > 1 else 0.0)
+
+
+# Table-2 granularities at sim-tractable workload scale; (lo, hi) bound the
+# analyze/simulate ratio for utilization (and hence effective TOPS).
+PARITY_CASES = [
+    # rows, cols, pods, workload, (lo, hi)
+    (32, 32, 256, "bert-mini", (0.9, 1.55)),
+    (64, 64, 128, "bert-mini", (0.9, 1.55)),
+    (128, 128, 32, "bert-mini", (0.9, 1.6)),
+    (512, 512, 1, "bert-mini", (0.999, 1.001)),
+    (32, 32, 256, "resnet50", (0.8, 1.15)),
+    (64, 64, 128, "resnet50", (0.8, 1.15)),
+    (128, 128, 32, "resnet50", (0.8, 1.2)),
+    (512, 512, 1, "resnet50", (0.999, 1.001)),
+]
+
+_WORKLOADS = {
+    "bert-mini": lambda: bert("mini", 100),
+    "resnet50": lambda: resnet(50, 64),
+}
+
+
+@pytest.mark.parametrize("rows,cols,pods,wl,band", PARITY_CASES)
+def test_analyze_matches_simulate(rows, cols, pods, wl, band):
+    gemms = _WORKLOADS[wl]()
+    accel = _accel(rows, cols, pods)
+    s = simulate(gemms, accel)
+    a = analyze(gemms, accel)
+    lo, hi = band
+
+    assert a.total_macs == s.total_macs          # MAC conservation, exact
+    assert a.num_tile_ops == s.num_tile_ops      # same tiling, exact
+    # identical service-time model on both paths (same k_bar closed form)
+    assert a.cycles_per_tile == pytest.approx(s.cycles_per_tile, rel=0.02)
+
+    assert s.utilization > 0
+    ratio_u = a.utilization / s.utilization
+    assert lo < ratio_u < hi, (wl, rows, cols, ratio_u)
+    ratio_e = a.effective_tops_at_tdp / s.effective_tops_at_tdp
+    assert lo < ratio_e < hi, (wl, rows, cols, ratio_e)
+
+    # analyze assumes perfect multicast reuse of X/W tiles, so its energy
+    # lower-bounds the scheduler's per-op accounting — never exceeds it
+    assert a.energy_joules <= s.energy_joules * 1.001
+    assert a.energy_joules > 0.5 * s.energy_joules
+
+
+def test_granularity_ordering_agrees_across_paths():
+    """Both evaluation paths must rank the paper's headline points the same
+    way: 32x32@256pods above 128x128@32pods (effective TOPS @TDP)."""
+    gemms = bert("mini", 100)
+    small_a = analyze(gemms, _accel(32, 32, 256))
+    large_a = analyze(gemms, _accel(128, 128, 32))
+    small_s = simulate(gemms, _accel(32, 32, 256))
+    large_s = simulate(gemms, _accel(128, 128, 32))
+    assert small_a.effective_tops_at_tdp > large_a.effective_tops_at_tdp
+    assert small_s.effective_tops_at_tdp > large_s.effective_tops_at_tdp
+
+
+def test_busy_pods_bounded_and_consistent():
+    gemms = resnet(50, 64)
+    for pods in (32, 256):
+        a = analyze(gemms, _accel(32, 32, pods))
+        s = simulate(gemms, _accel(32, 32, pods))
+        assert 0 < a.busy_pods <= 1.0
+        assert 0 < s.busy_pods <= 1.0
+
+
+@pytest.mark.slow
+def test_analyze_matches_simulate_bert_medium_full_point():
+    """The paper's design point (32x32 x 256 pods) on a mid-size BERT —
+    the heaviest cross-check (runs the full scheduler, ~10 s)."""
+    gemms = bert("medium", 100)
+    accel = _accel(32, 32, 256)
+    s = simulate(gemms, accel)
+    a = analyze(gemms, accel)
+    assert a.total_macs == s.total_macs
+    assert 0.9 < a.utilization / s.utilization < 1.55
