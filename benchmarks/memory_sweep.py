@@ -4,39 +4,47 @@ throughput (ResNet-152 batch 8, the largest working set in the suite).
 Model: per-level working set = live activation tiles + double-buffered
 weights; overflow beyond the on-chip SRAM (banks x size) spills to HBM at
 DRAM_BW, stretching the level's execution time.
+
+Since PR 2 the per-level loop is vectorized on the batched engine: the
+compute side of the whole (bank-size x design) grid is ONE analyze_batch
+call, and the working-set / spill side is the per-segment arrays already
+living on PackedWorkloads (level_working_set_bytes + sram_spill_bytes) —
+the ROADMAP's "memory sweep on the same engine" item.
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import ArrayConfig, AcceleratorConfig, analyze
-from repro.core.simulator import _levels
+import numpy as np
+
+from repro.core import analyze_batch, pack_workloads, sram_spill_bytes
+from repro.core.dse import build_design_vector
 from repro.core.workloads import resnet
 
 DRAM_BW = 700e9   # HBM, TPUv3-like (§5)
+BANK_KB = (64, 128, 256, 512, 1024)
 
 
 def bench(pods: int = 256) -> list[str]:
-    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=pods)
-    wl = resnet(152, 299, batch=8)
-    base = analyze(wl, accel)
-    lines = []
+    designs = [(32, 32, "butterfly-2", pods),
+               (64, 64, "butterfly-2", pods // 4)]
+    packed = pack_workloads({"resnet152@8": resnet(152, 299, batch=8)})
     t0 = time.time()
-    for bank_kb in (64, 128, 256, 512, 1024):
-        sram = pods * bank_kb * 1024
-        spill = 0.0
-        compute_s = base.total_cycles / 1e9
-        for level in _levels(wl):
-            ws = 0
-            for g in level:
-                ws += g.d1 * g.d2 + 2 * g.d2 * g.d3 + 2 * g.d1 * g.d3
-            spill += max(0, ws - sram)
+    batch = analyze_batch(packed, build_design_vector(designs))
+    bank_b = np.asarray(BANK_KB, dtype=np.float64) * 1024.0
+    lines = []
+    for p, (r, c, _, n_pods) in enumerate(designs):
+        compute_s = float(batch.total_cycles[p, 0]) / 1e9
+        eff_base = float(batch.effective_tops_at_tdp[p, 0])
+        spill = sram_spill_bytes(packed, n_pods * bank_b)[:, 0]  # (B,)
         dram_s = spill / DRAM_BW
-        eff = base.effective_tops_at_tdp * compute_s / (compute_s + dram_s)
-        us = (time.time() - t0) * 1e6
-        lines.append(
-            f"memory/bank{bank_kb}kB,{us:.0f},"
-            f"eff_rel={eff / base.effective_tops_at_tdp:.3f};"
-            f"dram_gb={spill / 1e9:.1f}")
+        eff_rel = compute_s / (compute_s + dram_s)
+        us = (time.time() - t0) * 1e6 / (len(designs) * len(BANK_KB))
+        tag = "" if p == 0 else f"{r}x{c}/"
+        for kb, rel, gb in zip(BANK_KB, eff_rel, spill / 1e9):
+            lines.append(
+                f"memory/{tag}bank{kb}kB,{us:.0f},"
+                f"eff_rel={rel:.3f};dram_gb={gb:.1f}")
+        assert eff_base > 0  # grid sanity: the analyze side produced cells
     return lines

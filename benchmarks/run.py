@@ -22,13 +22,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dse_map, granularity, interconnect, kernels_bench,
-                            memory_sweep, multitenancy, scaling, tiling_sweep)
+                            memory_sweep, multitenancy, scaling, tenancy,
+                            tiling_sweep)
     suites = {
         "granularity": granularity.bench,       # Table 2 + Fig 9
         "interconnect": interconnect.bench,     # Table 1 + Fig 12a
         "tiling": tiling_sweep.bench,           # Fig 12b
         "dse": dse_map.bench,                   # Fig 5
         "multitenancy": multitenancy.bench,     # Fig 11
+        "tenancy": tenancy.bench,               # tenant-mix DSE (repro.tenancy)
         "memory": memory_sweep.bench,           # Fig 13
         "scaling": scaling.bench,               # Fig 10
         "kernels": kernels_bench.bench,         # §4.1 pod microarchitecture

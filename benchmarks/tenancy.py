@@ -1,0 +1,50 @@
+"""Tenant-mix DSE on the batched co-schedule planner (repro.tenancy).
+
+The multi-tenant counterpart of the Fig-5 granularity sweep: for every
+pair-mix over a 5-workload suite, find the pod granularity that maximizes
+co-scheduled effective TOPS @TDP — the whole (8 designs x 10 mixes) grid
+is ONE analyze_batch call (tenancy.sweep.mix_dse). A second phase compares
+the time-multiplexed and space-shared policies on the Fig-11 mix
+(tenancy.planner), reporting per-policy fairness and SLO-free latency.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.tenancy import (SPACE_SHARE, TIME_MUX, default_mixes, dse_designs,
+                           fig11_mixes, mix_dse, plan_mixes)
+
+
+def bench() -> list[str]:
+    lines = []
+
+    # phase 1 — best granularity per mix, one batched planner call
+    mixes = default_mixes()
+    designs = dse_designs()
+    t0 = time.time()
+    best = mix_dse(mixes, designs)
+    us = (time.time() - t0) * 1e6 / max(1, len(best))
+    for name, plan in sorted(best.items()):
+        lines.append(
+            f"tenancy/mixdse/{name},{us:.0f},"
+            f"best={plan.rows}x{plan.cols}x{plan.num_pods};"
+            f"eff_tops={plan.effective_tops_at_tdp:.1f};"
+            f"gain={plan.parallel_gain:.2f}x;"
+            f"fairness={plan.fairness:.3f}")
+
+    # phase 2 — policy face-off on the Fig-11 mix (paper's §6.1 cell)
+    f11 = fig11_mixes(batches=(1,))
+    cell = [(32, 32, "butterfly-2", 256)]
+    for policy in (TIME_MUX, SPACE_SHARE):
+        t0 = time.time()
+        plan = plan_mixes(f11, cell, policy=policy)[0][0]
+        us = (time.time() - t0) * 1e6
+        worst = max(plan.streams, key=lambda s: s.slowdown)
+        lines.append(
+            f"tenancy/policy/{policy},{us:.0f},"
+            f"eff_tops={plan.effective_tops_at_tdp:.1f};"
+            f"gain={plan.parallel_gain:.2f}x;"
+            f"fairness={plan.fairness:.3f};"
+            f"worst_slowdown={worst.slowdown:.2f}x@{worst.tenant}")
+    return lines

@@ -38,8 +38,8 @@ from .arrays import (ACT_BYTES, CLOCK_HZ, E_MAC_PJ, E_SRAM_PJ_PER_BYTE,
                      OPS_PER_MAC, PSUM_BYTES, TDP_WATTS, WEIGHT_BYTES,
                      ArrayConfig, AcceleratorConfig, max_pods_under_tdp)
 from .interconnect import icn_stage_mw_arrays
-from .simulator import (_ICN_EFFICIENCY, DesignVector, PackedWorkloads,
-                        analyze_batch, analyze_scalar, pack_workloads)
+from .simulator import (DesignVector, PackedWorkloads, analyze_batch,
+                        analyze_scalar, icn_efficiency, pack_workloads)
 from .tiling import GemmSpec
 
 # a design is (rows, cols, interconnect, num_pods or None for isopower)
@@ -123,7 +123,7 @@ def build_design_vector(designs: list[Design],
         stages[m] = st
         energy_mw[m] = mw
         icn_mw[m] = np.where(pods > 1, mw, 0.0)            # monolithic: no icn
-        eff[m] = _ICN_EFFICIENCY.get(name, 1.0)
+        eff[m] = icn_efficiency(name)
 
     peak_watts = pod_watts * num_pods + edge_bytes * num_pods * icn_mw * 1e-3
     peak_ops = rows * cols * OPS_PER_MAC * CLOCK_HZ * num_pods

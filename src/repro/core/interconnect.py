@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 
 import numpy as np
 
@@ -108,32 +109,31 @@ class ButterflyRouter:
             node_prev = node
         return out
 
-    def route(self, pairs: list[tuple[int, int]]) -> bool:
-        """True iff all (src, dst) pairs route conflict-free on k planes.
+    def new_planes(self) -> list[dict]:
+        """Fresh per-plane edge-ownership state for try_place."""
+        return [dict() for _ in range(self.expansion)]
 
-        Multicast (same src to many dsts) shares edges by definition (copies
-        fork at switches), so identical-prefix edges from the same source do
-        not conflict; distinct sources must be edge-disjoint.
-        """
-        planes: list[dict[tuple[int, int], int]] = [dict() for _ in range(self.expansion)]
-        for s, d in pairs:
-            placed = False
-            for plane in planes:
-                edges = self._edges(s, d)
-                ok = True
+    def try_place(self, planes: list[dict], s: int, d: int) -> bool:
+        """Greedily commit (s -> d) to the first plane where its unique
+        path is edge-disjoint from paths already placed there. Multicast
+        (same src to many dsts) shares edges by definition (copies fork at
+        switches), so identical-prefix edges from the same source do not
+        conflict; distinct sources must be edge-disjoint. This one helper
+        defines the placement semantics for both route() and the
+        routed_fraction calibration (the scheduler's incremental probe/
+        commit variant lives in scheduler._IncrementalButterfly)."""
+        edges = self._edges(s, d)
+        for plane in planes:
+            if all(plane.get(e) in (None, s) for e in edges):
                 for e in edges:
-                    owner = plane.get(e)
-                    if owner is not None and owner != s:
-                        ok = False
-                        break
-                if ok:
-                    for e in edges:
-                        plane[e] = s
-                    placed = True
-                    break
-            if not placed:
-                return False
-        return True
+                    plane[e] = s
+                return True
+        return False
+
+    def route(self, pairs: list[tuple[int, int]]) -> bool:
+        """True iff all (src, dst) pairs route conflict-free on k planes."""
+        planes = self.new_planes()
+        return all(self.try_place(planes, s, d) for s, d in pairs)
 
     def spec(self) -> IcnSpec:
         return butterfly_spec(self.n, self.expansion)
@@ -233,6 +233,48 @@ def icn_stage_mw_arrays(name: str, ports: np.ndarray) -> tuple[np.ndarray, np.nd
         stages = 2 * _floor_log2(ports)
         return stages, E_SW_MW_PER_BYTE_STAGE * stages.astype(np.float64)
     raise ValueError(f"unknown interconnect: {name}")
+
+
+def routed_fraction(kind: str, ports: int = 256, samples: int = 8,
+                    candidates: int = 8, seed: int = 0) -> float:
+    """Measured pod availability of a fabric under the scheduler's traffic.
+
+    Greedily routes `samples` random full-permutation slices through the
+    functional router, giving each source the same destination-search width the
+    offline scheduler uses (`SliceScheduler` probes up to 8 pod candidates
+    per op before bumping the slice). Returns the mean fraction of sources
+    that found a conflict-free path — the functional counterpart of
+    Table 1's busy-pods column, used to *calibrate* the analytical model's
+    `_ICN_EFFICIENCY` instead of hardcoding the paper's ratio
+    (simulator.icn_efficiency; regression-pinned to within 5% of Table 1
+    in tests/test_tenancy.py).
+
+    Full-permutation fabrics (Benes/Crossbar) route everything by
+    construction and return 1.0 without sampling.
+    """
+    router = make_router(kind, ports)
+    if isinstance(router, IdealRouter):
+        return 1.0
+    rng = random.Random(seed)
+    total = 0.0
+    for _ in range(samples):
+        srcs = list(range(ports))
+        dsts = list(range(ports))
+        rng.shuffle(srcs)
+        rng.shuffle(dsts)
+        free = list(dsts)
+        planes = router.new_planes()
+        placed = 0
+        for src in srcs:
+            for a in range(min(candidates, len(free))):
+                # same deterministic candidate rotation as the scheduler
+                ci = (src + a * 37) % len(free)
+                if router.try_place(planes, src, free[ci]):
+                    free.pop(ci)
+                    placed += 1
+                    break
+        total += placed / ports
+    return total / samples
 
 
 class IdealRouter:

@@ -10,7 +10,11 @@ over the DP mesh axes).
 SOSA tie-in (§6.1 multi-tenancy): co-scheduling independent request
 streams is exactly the paper's multi-tenant utilization argument — decode
 GEMVs from many requests fuse into one batched GEMM, raising tiles/pod.
-`benchmarks/multitenancy.py` quantifies it with the simulator.
+Pass `tracer=tenancy.ServeTraceRecorder()` to record the engine's actual
+prefill/decode timeline; `tenancy/trace.py` lowers it to a GemmSpec tenant
+for the co-schedule planner (tenancy/planner.py), and
+`benchmarks/multitenancy.py` quantifies the co-scheduling gain with the
+simulator.
 """
 
 from __future__ import annotations
@@ -37,12 +41,16 @@ class Request:
 class ServeEngine:
     def __init__(self, model: Model, params, slots: int = 4,
                  max_len: int = 512, src_len: int = 0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, tracer=None):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
+        # optional duck-typed event sink (tenancy.ServeTraceRecorder): gets
+        # on_prefill(rid, prompt_len) / on_decode(lanes, contexts) in the
+        # engine's step-locked order
+        self.tracer = tracer
         self.cache = model.init_cache(slots, max_len, src_len=src_len)
         self.active: list[Optional[Request]] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
@@ -73,6 +81,8 @@ class ServeEngine:
         (single-lane prefill batch; production would group same-length
         prompts — the batching policy is orthogonal to the cache layout)."""
         S = len(req.prompt)
+        if self.tracer is not None:
+            self.tracer.on_prefill(req.rid, S)
         lane_cache = self.model.init_cache(1, self.max_len)
         logits, lane_cache = self.model.prefill(
             self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
@@ -91,6 +101,9 @@ class ServeEngine:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
+        if self.tracer is not None:
+            self.tracer.on_decode(len(live),
+                                  [int(self.positions[i]) for i in live])
         toks = np.zeros(self.slots, np.int32)
         for i in live:
             toks[i] = self.active[i].out[-1]

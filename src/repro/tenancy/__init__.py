@@ -1,0 +1,35 @@
+"""repro.tenancy — multi-tenant co-scheduling on the batched DSE engine.
+
+SOSA's third pillar (§6.1, Fig 11): recover idle pod slices by
+co-scheduling independent inference streams. This package turns the
+one-off scalar loop that used to live in benchmarks/multitenancy.py into a
+subsystem:
+
+  mix.py     — declarative tenant mixes; merged co-schedules packed so a
+               (designs x mixes) grid is ONE core.simulator.analyze_batch
+  planner.py — time-multiplexed vs space-shared co-schedule planner with
+               per-tenant latency / SLO attainment / fairness / effective
+               TOPS, validated against the slice-accurate SliceScheduler
+  sweep.py   — the batched Fig-11 reproduction + tenant-mix DSE
+  trace.py   — bridge from serve/engine.py request streams to planner
+               tenants (ServeEngine(tracer=ServeTraceRecorder()))
+"""
+
+from .mix import (Tenant, TenantMix, mix_grid, pack_mixes, solo_workloads,
+                  tenant, tenant_depths)
+from .planner import (SPACE_SHARE, TIME_MUX, TenancyPlan, TenantReport,
+                      partition_pods, plan_mix_scalar, plan_mixes,
+                      plan_space_share, plan_time_mux)
+from .sweep import (default_mixes, dse_designs, fig11_mixes, fig11_sweep,
+                    mix_dse)
+from .trace import ServeTraceRecorder, trace_tenant, trace_to_gemms
+
+__all__ = [
+    "Tenant", "TenantMix", "mix_grid", "pack_mixes", "solo_workloads",
+    "tenant", "tenant_depths",
+    "SPACE_SHARE", "TIME_MUX", "TenancyPlan", "TenantReport",
+    "partition_pods", "plan_mix_scalar", "plan_mixes", "plan_space_share",
+    "plan_time_mux",
+    "default_mixes", "dse_designs", "fig11_mixes", "fig11_sweep", "mix_dse",
+    "ServeTraceRecorder", "trace_tenant", "trace_to_gemms",
+]

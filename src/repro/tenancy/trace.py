@@ -1,0 +1,126 @@
+"""Trace bridge: serve/engine.py request streams -> GemmSpec tenants.
+
+`ServeTraceRecorder` plugs into `ServeEngine(tracer=...)` and records the
+engine's actual prefill / step-locked-decode events as it serves a request
+stream. `trace_to_gemms` then lowers the recorded timeline to the same
+GEMM-trace form as core/workloads.py: each prefill contributes the prompt's
+projection/attention/FFN GEMMs at d1 = prompt length; each decode step
+contributes the *fused* batched GEMMs the continuous batcher actually runs
+(d1 = live lanes for the weight GEMMs — many tenants' decode GEMVs fused
+into one GEMM is exactly the paper's §6.1 multi-tenant utilization
+argument) plus the per-step attention reads at the lanes' true context
+lengths.
+
+The result feeds the co-schedule planner (tenancy/planner.py) with
+realistic serving workloads instead of hand-written suite traces:
+
+    rec = ServeTraceRecorder()
+    engine = ServeEngine(model, params, tracer=rec)
+    ... submit / run_to_completion ...
+    t = trace_tenant("llm-serve", rec, model.cfg, slo_latency_s=1e-3)
+    plans = plan_mixes([TenantMix("serve+cnn", (t, cnn_tenant))], designs)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ArchConfig
+from ..core.tiling import GemmSpec
+from ..core.workloads import _Trace
+from .mix import Tenant
+
+
+@dataclasses.dataclass
+class ServeTraceRecorder:
+    """Engine-side event log; see ServeEngine(tracer=...) in serve/engine.py.
+
+    Events are ("prefill", prompt_len) and ("decode", lanes, contexts) in
+    engine wall-clock order — the step-locked sequence the pods would see.
+    """
+
+    events: list[tuple] = dataclasses.field(default_factory=list)
+
+    def on_prefill(self, rid: int, prompt_len: int) -> None:
+        self.events.append(("prefill", int(prompt_len)))
+
+    def on_decode(self, lanes: int, contexts: list[int]) -> None:
+        self.events.append(("decode", int(lanes), tuple(int(c) for c in contexts)))
+
+    @property
+    def num_prefills(self) -> int:
+        return sum(1 for e in self.events if e[0] == "prefill")
+
+    @property
+    def num_decode_steps(self) -> int:
+        return sum(1 for e in self.events if e[0] == "decode")
+
+
+def _layer_gemms(t: _Trace, cfg: ArchConfig, d1: int, attn_d1: int,
+                 ctx: int, include_attention: bool) -> None:
+    """One transformer layer's GEMMs at batch-rows d1 (fused lanes)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kv = max(1, cfg.n_kv_heads)
+    prev = t._next - 1
+    q = t.add(d1, d, cfg.n_heads * hd, deps=(prev,), name="q")
+    k = t.add(d1, d, kv * hd, deps=(prev,), name="k")
+    v = t.add(d1, d, kv * hd, deps=(prev,), name="v")
+    last: tuple[int, ...] = (q, k, v)
+    if include_attention and ctx > 0:
+        sc = t.add(attn_d1, hd, ctx, deps=(q, k), name="qk")
+        av = t.add(attn_d1, ctx, hd, deps=(sc, v), name="av")
+        last = (av,)
+    o = t.add(d1, cfg.n_heads * hd, d, deps=last, name="o")
+    f1 = t.add(d1, d, cfg.d_ff, deps=(o,), name="ffn_up")
+    t.add(d1, cfg.d_ff, d, deps=(f1,), name="ffn_down")
+
+
+def trace_to_gemms(recorder: ServeTraceRecorder, cfg: ArchConfig,
+                   include_attention: bool = True,
+                   include_lm_head: bool = False) -> list[GemmSpec]:
+    """Lower a recorded serving timeline to a GemmSpec stream.
+
+    Events chain sequentially (the engine is step-locked: a prefill or a
+    decode step must drain before the next step launches), layers chain
+    within an event — the same dependency discipline as
+    workloads.transformer_lm, with d1 set by what the engine actually
+    batched rather than a hypothetical shape.
+    """
+    t = _Trace()
+    for ev in recorder.events:
+        if ev[0] == "prefill":
+            seq = ev[1]
+            for _ in range(cfg.n_layers):
+                # prompt attention: all heads' (seq x hd) @ (hd x seq)
+                # score GEMMs fused row-wise, like the decode events below
+                _layer_gemms(t, cfg, d1=seq, attn_d1=seq * cfg.n_heads,
+                             ctx=seq, include_attention=include_attention)
+        else:
+            _, lanes, contexts = ev
+            ctx = max(1, round(sum(contexts) / len(contexts))) \
+                if contexts else 0
+            for _ in range(cfg.n_layers):
+                # decode: weight GEMMs fuse all live lanes into d1 = lanes;
+                # attention reads are per-lane-per-head GEMVs at the mean
+                # context length of the step's lanes
+                _layer_gemms(t, cfg, d1=lanes,
+                             attn_d1=lanes * cfg.n_heads, ctx=ctx,
+                             include_attention=include_attention)
+        if include_lm_head and cfg.vocab:
+            # ev[1] is rows either way: prompt length or fused lanes
+            t.add(ev[1], cfg.d_model, cfg.vocab, name="lm_head")
+    return t.gemms
+
+
+def trace_tenant(name: str, recorder: ServeTraceRecorder, cfg: ArchConfig,
+                 replicas: int = 1, slo_latency_s: float | None = None,
+                 **kw) -> Tenant:
+    """Recorded serving stream as a planner Tenant (see tenancy/mix.py)."""
+    gemms = trace_to_gemms(recorder, cfg, **kw)
+    if not gemms:
+        raise ValueError(
+            f"tenant {name!r}: recorder saw no prefill/decode events — "
+            "was the engine constructed with tracer=recorder and run?")
+    return Tenant(name=name, gemms=tuple(gemms), replicas=replicas,
+                  slo_latency_s=slo_latency_s)

@@ -1,0 +1,400 @@
+"""repro.tenancy: batched co-schedule planner vs the scalar oracle, the
+Fig-11 reproduction, SliceScheduler parity, the serve-engine trace bridge,
+and the two satellite models that ride the same engine (vectorized SRAM
+spill, functional-router ICN calibration).
+
+The load-bearing guarantees:
+  * the whole (>= 8 designs x >= 8 mixes) grid is ONE analyze_batch call,
+    and every cell matches the pure-Python merge_workloads + wave-model
+    oracle (plan_mix_scalar) to float tolerance;
+  * the Fig-11 co-schedule shows parallel >= sequential everywhere and
+    > 1.2x at 128 pods (paper: 1.44x at 256), property-tested through the
+    hypothesis fallback;
+  * the planner's merged-trace makespan sits inside the calibrated
+    analyze<->simulate parity bands (tests/test_simulator.py) against the
+    slice-accurate SliceScheduler.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # degrade gracefully: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (AcceleratorConfig, ArrayConfig, icn_efficiency,
+                        pack_workloads, routed_fraction, simulate,
+                        sram_spill_bytes)
+from repro.core.simulator import _levels
+from repro.core.workloads import bert, resnet
+from repro.tenancy import (SPACE_SHARE, TIME_MUX, ServeTraceRecorder, Tenant,
+                           TenantMix, fig11_mixes, mix_grid, pack_mixes,
+                           partition_pods, plan_mix_scalar, plan_mixes,
+                           plan_space_share, plan_time_mux, solo_workloads,
+                           trace_tenant, trace_to_gemms)
+
+# -- small but structurally rich mix/design grid ---------------------------
+
+_FACTORIES = {
+    "resnet50@64": lambda b: resnet(50, 64, batch=b),
+    "bert-mini@40": lambda b: bert("mini", 40, batch=b),
+    "bert-mini@100": lambda b: bert("mini", 100, batch=b),
+    "resnet50@96": lambda b: resnet(50, 96, batch=b),
+}
+
+
+def _mixes8() -> list[TenantMix]:
+    """12 mixes (4 choose 2 = 6 pairs x 2 batches) — >= the 8 the
+    acceptance grid requires."""
+    return mix_grid(_FACTORIES, batches=(1, 2), pair_size=2)
+
+
+def _designs8():
+    """8 design points mixing granularity, fabric, and isopower pods."""
+    return [
+        (16, 16, "butterfly-2", 256),
+        (32, 32, "butterfly-2", 64),
+        (32, 32, "butterfly-2", 256),
+        (32, 32, "butterfly-1", 128),
+        (64, 64, "butterfly-2", 64),
+        (64, 64, "crossbar", None),
+        (128, 128, "butterfly-2", None),
+        (32, 64, "benes", 128),
+    ]
+
+
+# --------------------------------------------------------------------------
+# batched grid == scalar merge_workloads + analyze oracle
+# --------------------------------------------------------------------------
+
+
+def test_grid_is_one_analyze_batch_call(monkeypatch):
+    """>= (8 designs x 8 mixes) through exactly one analyze_batch call."""
+    import repro.tenancy.planner as planner_mod
+    calls = []
+    real = planner_mod.analyze_batch
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(planner_mod, "analyze_batch", counting)
+    mixes, designs = _mixes8(), _designs8()
+    grid = planner_mod.plan_time_mux(mixes, designs)
+    assert len(calls) == 1
+    assert len(grid) == len(designs) >= 8
+    assert all(len(row) == len(mixes) >= 8 for row in grid)
+
+
+def test_batched_grid_matches_scalar_oracle():
+    """Every cell of the batched grid equals the pure-Python oracle."""
+    mixes, designs = _mixes8(), _designs8()
+    grid = plan_time_mux(mixes, designs)
+    for p, design in enumerate(designs):
+        for m, mix in enumerate(mixes):
+            b = grid[p][m]
+            s = plan_mix_scalar(mix, design)
+            assert (b.rows, b.cols, b.num_pods) == (s.rows, s.cols, s.num_pods)
+            for f in ("makespan_s", "utilization", "effective_tops_at_tdp",
+                      "sequential_effective_tops"):
+                assert getattr(b, f) == pytest.approx(
+                    getattr(s, f), rel=1e-9), (f, design, mix.name)
+            for sb, ss in zip(b.streams, s.streams):
+                assert sb.tenant == ss.tenant
+                assert sb.latency_s == pytest.approx(ss.latency_s, rel=1e-9)
+                assert sb.solo_latency_s == pytest.approx(
+                    ss.solo_latency_s, rel=1e-9)
+            assert b.fairness == pytest.approx(s.fairness, rel=1e-9)
+
+
+def test_stream_latencies_bounded_by_makespan():
+    mixes, designs = _mixes8(), _designs8()
+    grid = plan_time_mux(mixes, designs)
+    for row in grid:
+        for plan in row:
+            for s in plan.streams:
+                assert 0 < s.latency_s <= plan.makespan_s * (1 + 1e-12)
+                assert s.slowdown >= 1.0 - 1e-12
+            # deepest stream drains last: its latency IS the makespan
+            assert max(s.latency_s for s in plan.streams) == pytest.approx(
+                plan.makespan_s, rel=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Fig 11: parallel >= sequential, > 1.2x at 128 pods
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(pods=st.sampled_from([64, 128, 256, 512]),
+       gran=st.sampled_from([16, 32, 64]),
+       batch=st.sampled_from([1, 2, 4]))
+def test_fig11_parallel_geq_sequential(pods, gran, batch):
+    """Co-scheduling the Fig-11 pair never loses to back-to-back solo runs
+    anywhere in the (pods x granularity x batch) space."""
+    mixes = fig11_mixes(batches=(batch,))
+    plan = plan_time_mux(mixes, [(gran, gran, "butterfly-2", pods)])[0][0]
+    assert plan.parallel_gain >= 1.0 - 1e-9
+    assert plan.slo_attainment == 1.0          # no SLOs declared
+    assert 0 < plan.fairness <= 1.0 + 1e-12
+
+
+def test_fig11_gain_at_128_pods():
+    """The acceptance cell: paper-direction gain (> 1.2x) on 128 pods at
+    batch 1, growing with pod count, shrinking with batch (Fig 11)."""
+    grid = plan_time_mux(fig11_mixes(batches=(1, 2, 4, 8)),
+                         [(32, 32, "butterfly-2", 128),
+                          (32, 32, "butterfly-2", 256)])
+    g128 = [plan.parallel_gain for plan in grid[0]]
+    g256 = [plan.parallel_gain for plan in grid[1]]
+    assert g128[0] > 1.2
+    assert g256[0] > g128[0]                   # more pods, more idle to win
+    assert g128 == sorted(g128, reverse=True)  # batching erodes the gain
+    assert g256 == sorted(g256, reverse=True)
+
+
+# --------------------------------------------------------------------------
+# planner vs the slice-accurate SliceScheduler (calibrated bands)
+# --------------------------------------------------------------------------
+
+
+def _parity_mix(image: int, seq: int) -> TenantMix:
+    return TenantMix(name="parity", tenants=(
+        Tenant(name="rn", gemms=tuple(resnet(50, image))),
+        Tenant(name="bt", gemms=tuple(bert("mini", seq)), replicas=2)))
+
+
+def _parity_check(mix: TenantMix, pods: int, band: tuple[float, float]):
+    accel = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=pods)
+    s = simulate(mix.merged(), accel)
+    plan = plan_time_mux([mix], [(32, 32, "butterfly-2", pods)])[0][0]
+    util_a = plan.utilization
+    lo, hi = band
+    assert lo < util_a / s.utilization < hi, util_a / s.utilization
+    # same headline metric on both paths
+    eff_s = s.effective_tops_at_tdp
+    assert lo < plan.effective_tops_at_tdp / eff_s < hi
+
+
+def test_planner_matches_slice_scheduler_small():
+    """Merged-graph parity at sim-tractable scale: same bands as the
+    analyze<->simulate suite (BERT-optimistic up to ~1.55x)."""
+    _parity_check(_parity_mix(64, 40), pods=64, band=(0.8, 1.55))
+
+
+@pytest.mark.slow
+def test_planner_matches_slice_scheduler_fig11_scale():
+    """The Fig-11-shaped co-schedule against the full scheduler (~10 s)."""
+    _parity_check(_parity_mix(96, 100), pods=128, band=(0.8, 1.55))
+
+
+# --------------------------------------------------------------------------
+# space-shared policy
+# --------------------------------------------------------------------------
+
+
+def test_partition_pods_properties():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = int(2 ** rng.integers(2, 9))
+        k = int(rng.integers(1, min(n, 6) + 1))
+        macs = rng.integers(1, 10 ** 9, size=k).astype(float)
+        pods = partition_pods(n, macs)
+        assert pods.sum() <= n
+        assert (pods >= 1).all()
+        assert all((p & (p - 1)) == 0 for p in pods)  # powers of two
+    with pytest.raises(ValueError):
+        partition_pods(2, np.ones(3))
+
+
+def test_space_share_plan_invariants():
+    mixes = fig11_mixes(batches=(1,))
+    designs = [(32, 32, "butterfly-2", 128), (32, 32, "butterfly-2", 256)]
+    grid = plan_space_share(mixes, designs)
+    for row, pods in zip(grid, (128, 256)):
+        plan = row[0]
+        assert plan.policy == SPACE_SHARE
+        assert sum(s.pods for s in plan.streams) <= pods
+        for s in plan.streams:
+            # a partition slice can only slow a stream down vs full machine
+            assert s.slowdown >= 1.0 - 1e-9
+        assert plan.makespan_s == pytest.approx(
+            max(s.latency_s for s in plan.streams), rel=1e-12)
+    # the classic trade-off on this mix: time-mux wins throughput,
+    # space-share wins fairness (isolation)
+    tm = plan_mixes(mixes, designs[1:], policy=TIME_MUX)[0][0]
+    ss = grid[1][0]
+    assert tm.effective_tops_at_tdp > ss.effective_tops_at_tdp
+    assert ss.fairness > tm.fairness
+
+
+def test_slo_attainment_reported():
+    tight, loose = 1e-7, 10.0
+    mix = TenantMix(name="slo", tenants=(
+        Tenant(name="rn", gemms=tuple(resnet(50, 64)), slo_latency_s=loose),
+        Tenant(name="bt", gemms=tuple(bert("mini", 40)),
+               slo_latency_s=tight)))
+    plan = plan_time_mux([mix], [(32, 32, "butterfly-2", 64)])[0][0]
+    met = {s.tenant: s.slo_met for s in plan.streams}
+    assert met["rn"] is True and met["bt"] is False
+    assert plan.slo_attainment == 0.5
+
+
+# --------------------------------------------------------------------------
+# serve-engine trace bridge
+# --------------------------------------------------------------------------
+
+
+def test_trace_bridge_synthetic_events():
+    from repro.configs import get_arch, reduced
+    cfg = reduced(get_arch("granite-8b"))
+    rec = ServeTraceRecorder()
+    rec.on_prefill(0, 12)
+    rec.on_decode(1, [12])
+    rec.on_prefill(1, 7)
+    rec.on_decode(2, [13, 7])
+    gemms = trace_to_gemms(rec, cfg)
+    # 8 GEMMs per layer per event (qkv + qk/av + o + 2 ffn)
+    assert len(gemms) == 4 * cfg.n_layers * 8
+    # prefill rows = prompt len; fused decode rows = live lanes
+    assert gemms[0].d1 == 12
+    d1s = [g.d1 for g in gemms if g.name == "q"]
+    assert d1s == [12] * cfg.n_layers + [1] * cfg.n_layers \
+        + [7] * cfg.n_layers + [2] * cfg.n_layers
+    # events chain: a valid dependency order with increasing gemm ids
+    by_id = {g.gemm_id: g for g in gemms}
+    for g in gemms:
+        assert all(d in by_id and d < g.gemm_id for d in g.depends_on)
+    t = trace_tenant("serve", rec, cfg, slo_latency_s=1e-3)
+    plan = plan_time_mux(
+        [TenantMix(name="serve+rn", tenants=(
+            t, Tenant(name="rn", gemms=tuple(resnet(50, 64)))))],
+        [(32, 32, "butterfly-2", 64)])[0][0]
+    assert plan.parallel_gain >= 1.0 - 1e-9
+    assert {s.tenant for s in plan.streams} == {"serve", "rn"}
+
+
+def test_trace_bridge_records_live_engine():
+    """The engine's actual continuous-batching timeline drives the planner
+    (serve/engine.py tracer hook -> tenancy/trace.py -> planner)."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_arch, reduced
+    from repro.models.model import Model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rec = ServeTraceRecorder()
+    engine = ServeEngine(model, params, slots=2, max_len=32, tracer=rec)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        engine.submit(Request(rid=i,
+                              prompt=rng.integers(0, cfg.vocab, 4 + 2 * i,
+                                                  dtype=np.int32),
+                              max_new_tokens=3))
+    engine.run_to_completion(max_steps=50)
+    assert rec.num_prefills == 3
+    assert rec.num_decode_steps >= 3
+    # decode events saw fused lanes (continuous batching), never > slots
+    lanes = [e[1] for e in rec.events if e[0] == "decode"]
+    assert max(lanes) <= 2 and max(lanes) == 2
+    tnt = trace_tenant("lm", rec, cfg)
+    assert tnt.macs > 0 and tnt.depth > 1
+
+
+def test_trace_tenant_rejects_empty_recorder():
+    from repro.configs import get_arch, reduced
+    with pytest.raises(ValueError):
+        trace_tenant("empty", ServeTraceRecorder(),
+                     reduced(get_arch("granite-8b")))
+
+
+# --------------------------------------------------------------------------
+# mix construction invariants
+# --------------------------------------------------------------------------
+
+
+def test_mix_grid_and_pack_shapes():
+    mixes = _mixes8()
+    assert len(mixes) == 12
+    packed = pack_mixes(mixes)
+    assert packed.num_workloads == 12
+    # merged mix MACs = sum of replica-stream MACs
+    for m, mix in enumerate(mixes):
+        g0 = packed.wl_gemm_starts[m]
+        g1 = packed.wl_gemm_starts[m + 1] if m + 1 < len(mixes) \
+            else len(packed.d1)
+        assert int(packed.macs[g0:g1].sum()) == mix.total_macs
+
+
+def test_mix_validation_errors():
+    rn = tuple(resnet(50, 64))
+    with pytest.raises(ValueError):
+        Tenant(name="x", gemms=())
+    with pytest.raises(ValueError):
+        Tenant(name="x", gemms=rn, replicas=0)
+    with pytest.raises(ValueError):
+        TenantMix(name="m", tenants=())
+    m = TenantMix(name="m", tenants=(Tenant(name="x", gemms=rn),))
+    with pytest.raises(ValueError):
+        pack_mixes([m, m])
+    # same tenant name, different trace -> solo baseline would be ambiguous
+    m2 = TenantMix(name="m2", tenants=(
+        Tenant(name="x", gemms=tuple(bert("mini", 40))),))
+    with pytest.raises(ValueError):
+        solo_workloads([m, m2])
+
+
+# --------------------------------------------------------------------------
+# satellite: vectorized SRAM spill == the scalar per-level loop
+# --------------------------------------------------------------------------
+
+
+def test_sram_spill_matches_scalar_loop():
+    suite = {"rn": resnet(50, 128, batch=2), "bt": bert("mini", 100)}
+    packed = pack_workloads(suite)
+    caps = np.array([0.5e6, 2e6, 8e6, 64e6])
+    got = sram_spill_bytes(packed, caps)
+    assert got.shape == (len(caps), len(suite))
+    for w, (name, wl) in enumerate(suite.items()):
+        for b, cap in enumerate(caps):
+            spill = 0.0
+            for level in _levels(wl):
+                ws = sum(g.d1 * g.d2 + 2 * g.d2 * g.d3 + 2 * g.d1 * g.d3
+                         for g in level)
+                spill += max(0.0, ws - cap)
+            assert got[b, w] == pytest.approx(spill, rel=1e-12), (name, cap)
+    # monotone: more SRAM never spills more
+    assert (np.diff(got, axis=0) <= 0).all()
+
+
+# --------------------------------------------------------------------------
+# satellite: ICN efficiency calibrated from the functional router
+# --------------------------------------------------------------------------
+
+
+def test_icn_efficiency_calibrated_within_5pct_of_table1():
+    """The analytical model's Butterfly-1 busy-pod penalty now comes from
+    greedy functional routing of sampled permutations (with the
+    scheduler's 8-candidate search), not the hardcoded Table-1 ratio —
+    pinned to within 5% of the paper's 66.81/72.41."""
+    calibrated = icn_efficiency("butterfly-1")
+    paper = 66.81 / 72.41
+    assert abs(calibrated - paper) / paper < 0.05
+    assert calibrated < 1.0                      # it must cost something
+    # cached: second call returns the identical object value
+    assert icn_efficiency("butterfly-1") == calibrated
+    # full-permutation fabrics pay nothing, by construction and by measure
+    assert icn_efficiency("crossbar") == 1.0
+    assert routed_fraction("crossbar") == 1.0
+    assert routed_fraction("benes") == 1.0
+
+
+def test_routed_fraction_monotone_in_expansion():
+    """More expansion planes can only route more of a permutation."""
+    f1 = routed_fraction("butterfly-1", ports=64, samples=4)
+    f2 = routed_fraction("butterfly-2", ports=64, samples=4)
+    f4 = routed_fraction("butterfly-4", ports=64, samples=4)
+    assert 0 < f1 <= f2 <= f4 <= 1.0
