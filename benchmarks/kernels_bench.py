@@ -16,13 +16,18 @@ from repro.kernels.systolic_gemm.ops import systolic_gemm
 from repro.parallel.autoshard import choose_blocks
 
 
-def _time(fn, *args, n=3, **kw):
-    fn(*args, **kw)  # compile
-    t0 = time.time()
+def _time(fn, *args, n=3, warmup=1, **kw):
+    """Steady-state timing: warm (compile) calls first, then min-of-n with
+    every call blocked to completion — async dispatch otherwise overlaps
+    the loop and only the last call's device time is ever observed."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args, **kw))
+    best = float("inf")
     for _ in range(n):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / n * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def bench() -> list[str]:
@@ -35,8 +40,8 @@ def bench() -> list[str]:
     us = _time(systolic_gemm, x8, w8, interpret=True)
     us_ref = _time(lambda a, b: jnp.dot(a.astype(jnp.int32),
                                         b.astype(jnp.int32)), x8, w8)
-    bm, bn, bk = choose_blocks(M, K, N)
-    vmem_kb = 2 * 3 * (bm * bk + bk * bn + bm * bn) / 1024
+    bm, bn, bk = choose_blocks(M, K, N, dtype_bytes=1)
+    vmem_kb = (2 * (bm * bk + bk * bn) * 1 + bm * bn * (4 + 4)) / 1024
     lines.append(f"kernels/systolic_gemm_int8_{M},{us:.0f},"
                  f"jnp_ref_us={us_ref:.0f};blocks={bm}x{bn}x{bk};"
                  f"vmem_kb={vmem_kb:.0f}")

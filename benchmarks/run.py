@@ -2,28 +2,65 @@
 
 Prints ``name,us_per_call,derived`` CSV. Run:
     PYTHONPATH=src python -m benchmarks.run [--only granularity,...]
+                                            [--json BENCH_foo.json]
 
 The ``dse`` suite emits a ``dse/engine_speedup`` row comparing the batched
 analytical engine (core.dse.sweep -> simulator.analyze_batch) against the
-original scalar loop (core.dse.sweep_scalar) on the Fig-5 mixed grid.
+original scalar loop (core.dse.sweep_scalar) on the Fig-5 mixed grid; the
+``serving`` suite compares the bucketed + fused ServeEngine hot loop
+against the seed per-token engine (compile counts, tokens/s, p50/p99).
+
+``--json`` additionally writes the rows as a machine-readable
+``BENCH_*.json`` (schema ``sosa-bench-v1``) so the perf trajectory is
+recorded across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def parse_row(line: str) -> dict:
+    """One CSV row -> record. `derived` may itself contain ';'-separated
+    key=value pairs; it is kept verbatim (strings stay greppable) and the
+    row is split on the first two commas only."""
+    name, us, derived = line.split(",", 2)
+    suite = name.split("/", 1)[0]
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = 0.0
+    return {"suite": suite, "name": name, "us_per_call": us_val,
+            "derived": derived}
+
+
+def write_json(rows: list[dict], path: str) -> None:
+    """BENCH_*.json schema: header + the parsed rows."""
+    doc = {
+        "schema": "sosa-bench-v1",
+        "created_unix": time.time(),
+        "argv": sys.argv[1:],
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write rows as a BENCH_*.json record")
     args = ap.parse_args()
 
     from benchmarks import (dse_map, granularity, interconnect, kernels_bench,
-                            memory_sweep, multitenancy, scaling, tenancy,
-                            tiling_sweep)
+                            memory_sweep, multitenancy, scaling, serving,
+                            tenancy, tiling_sweep)
     suites = {
         "granularity": granularity.bench,       # Table 2 + Fig 9
         "interconnect": interconnect.bench,     # Table 1 + Fig 12a
@@ -34,8 +71,10 @@ def main() -> None:
         "memory": memory_sweep.bench,           # Fig 13
         "scaling": scaling.bench,               # Fig 10
         "kernels": kernels_bench.bench,         # §4.1 pod microarchitecture
+        "serving": serving.bench,               # hot-loop engine vs seed
     }
     only = set(args.only.split(",")) if args.only else None
+    rows: list[dict] = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if only and name not in only:
@@ -44,10 +83,16 @@ def main() -> None:
         try:
             for line in fn():
                 print(line, flush=True)
+                rows.append(parse_row(line))
         except Exception as e:  # noqa: BLE001
-            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
-        print(f"{name}/_total,{(time.time() - t0) * 1e6:.0f},done",
-              flush=True)
+            err = f"{name}/ERROR,0,{type(e).__name__}:{e}"
+            print(err, flush=True)
+            rows.append(parse_row(err))
+        total = f"{name}/_total,{(time.time() - t0) * 1e6:.0f},done"
+        print(total, flush=True)
+        rows.append(parse_row(total))
+    if args.json:
+        write_json(rows, args.json)
 
 
 if __name__ == "__main__":

@@ -17,8 +17,34 @@ TPU-native adaptation of the paper's systolic pod (DESIGN.md §2):
     serves the training stack.
 
 Block shapes are the kernel-level output of the SOSA granularity DSE: lane
-dims must be multiples of 128 (MXU), sublane multiples of 8/32; defaults
-(256, 256, 256) keep the three-buffer working set < 1 MiB VMEM.
+dims must be multiples of 128 (MXU), sublane multiples of 8/32.
+
+Autotuner contract (parallel.autoshard.choose_blocks)
+-----------------------------------------------------
+Block geometry is no longer a static 256^3 default: when the ops.py
+wrappers are called without explicit blocks, the DSE cost model picks them.
+The mapping between the kernel and the analytical tiling model
+(core.tiling.tile_stats) is exact:
+
+  * ``block_k``  = the pod array's contraction rows (ArrayConfig.rows),
+  * ``block_n``  = the pod array's output columns  (ArrayConfig.cols),
+  * ``block_m``  = the activation rows streamed per tile (``k_part``),
+
+so ``tile_stats([GemmSpec(M, K, N)], ArrayConfig(rows=block_k,
+cols=block_n), k_part=block_m)`` returns exactly this kernel's grid counts:
+``n_i = M/block_m`` x ``n_l = N/block_n`` x ``n_j = K/block_k`` (the RAW
+psum-chain depth carried by the accumulator scratch). `choose_blocks`
+scores every candidate geometry with a roofline over those counts —
+max(padded-MAC compute, HBM block traffic) — and rejects candidates whose
+VMEM working set (double-buffered x/w streaming blocks + accumulator +
+output block) exceeds the budget (default 12 MiB of the ~16 MiB VMEM).
+Results are lru-cached per (shape, dtype), so the serving hot loop pays
+for an autotune once per distinct layer shape.
+
+The grouped variant (`grouped_systolic_gemm_pallas`) adds a leading
+group axis to the grid — G independent (M x K) @ (K x N) problems in one
+kernel launch (MoE experts, multi-tenant fused lanes); block geometry and
+the psum-chain walk are per-group identical.
 """
 
 from __future__ import annotations
@@ -31,17 +57,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
-                 n_k: int, activation: str | None, out_dtype):
-    """One (i, j, k) grid step: acc += x_blk @ w_blk; epilogue at k == last."""
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = x_ref[...]
-    w = w_ref[...]
+def _accumulate(x, w, acc_ref):
     if x.dtype == jnp.int8:
         acc_ref[...] += jax.lax.dot_general(
             x, w, (((1,), (0,)), ((), ())),
@@ -51,20 +67,39 @@ def _gemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
             x, w, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
+
+def _epilogue_math(acc, scale, bias, activation):
+    """The paper's SIMD post-processor: dequant + bias + activation."""
+    acc = acc.astype(jnp.float32)
+    acc = acc * scale.astype(jnp.float32)                # dequant (per-col)
+    acc = acc + bias.astype(jnp.float32)
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    elif activation == "relu2":
+        acc = jnp.square(jnp.maximum(acc, 0.0))
+    return acc
+
+
+def _gemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+                 n_k: int, activation: str | None, out_dtype):
+    """One (i, j, k) grid step: acc += x_blk @ w_blk; epilogue at k == last."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate(x_ref[...], w_ref[...], acc_ref)
+
     @pl.when(k == n_k - 1)
     def _epilogue():
-        acc = acc_ref[...].astype(jnp.float32)
-        acc = acc * scale_ref[...].astype(jnp.float32)   # dequant (per-col)
-        acc = acc + bias_ref[...].astype(jnp.float32)
-        if activation == "relu":
-            acc = jnp.maximum(acc, 0.0)
-        elif activation == "gelu":
-            acc = jax.nn.gelu(acc)
-        elif activation == "silu":
-            acc = acc * jax.nn.sigmoid(acc)
-        elif activation == "relu2":
-            acc = jnp.square(jnp.maximum(acc, 0.0))
-        o_ref[...] = acc.astype(out_dtype)
+        o_ref[...] = _epilogue_math(
+            acc_ref[...], scale_ref[...], bias_ref[...],
+            activation).astype(out_dtype)
 
 
 def systolic_gemm_pallas(
@@ -108,3 +143,69 @@ def systolic_gemm_pallas(
         ],
         interpret=interpret,
     )(x, w, scale.reshape(1, N), bias.reshape(1, N))
+
+
+def _grouped_gemm_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref,
+                         *, n_k: int, activation: str | None, out_dtype):
+    """One (g, i, j, k) grid step of G independent GEMMs (K-minor walk)."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate(x_ref[0], w_ref[0], acc_ref)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[0] = _epilogue_math(
+            acc_ref[...], scale_ref[0], bias_ref[0],
+            activation).astype(out_dtype)
+
+
+def grouped_systolic_gemm_pallas(
+    x: jax.Array,                  # [G, M, K] int8 | bf16
+    w: jax.Array,                  # [G, K, N]
+    scale: jax.Array,              # [G, N] f32 per-group dequant scale
+    bias: jax.Array,               # [G, N] f32
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    activation: str | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """G independent pods in one launch: grid grows a leading group axis,
+    every group walks its own K-minor psum chain through the shared
+    accumulator scratch (groups are grid-major, so the scratch is reused
+    group after group exactly as it is tile after tile)."""
+    G, M, K = x.shape
+    G2, K2, N = w.shape
+    assert G == G2 and K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "caller (ops.py) pads to block multiples")
+    n_k = K // block_k
+    grid = (G, M // block_m, N // block_n, n_k)
+
+    kernel = functools.partial(
+        _grouped_gemm_kernel, n_k=n_k, activation=activation,
+        out_dtype=out_dtype)
+    acc_dtype = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, block_k, block_n), lambda g, i, j, k: (g, k, j)),
+            pl.BlockSpec((1, 1, block_n), lambda g, i, j, k: (g, 0, j)),
+            pl.BlockSpec((1, 1, block_n), lambda g, i, j, k: (g, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), acc_dtype),
+        ],
+        interpret=interpret,
+    )(x, w, scale.reshape(G, 1, N), bias.reshape(G, 1, N))

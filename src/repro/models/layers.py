@@ -119,6 +119,25 @@ def apply_rope(x, positions, theta: float):
     return out.astype(x.dtype)
 
 
+def pod_dense(x, w, *, activation: str | None = None):
+    """One dense projection on the Pallas systolic pod GEMM.
+
+    Fused-lane execution: every leading axis of x (decode lanes, sequence,
+    batch) collapses into the GEMM M axis, so a decode batch's per-lane
+    GEMVs run as the ONE fused [lanes, K] @ [K, N] GEMM the tenancy
+    co-scheduling analysis assumes. Trailing axes of w beyond the
+    contraction fold into N and unfold on return (e.g. [d, H, hd] heads).
+    Block geometry comes from the DSE autotuner
+    (parallel.autoshard.choose_blocks, per-shape cached); `activation`
+    runs in the kernel's fused epilogue (the paper's SIMD post-processor).
+    """
+    from ..kernels.systolic_gemm.ops import fused_lane_gemm
+    k = x.shape[-1]
+    out = fused_lane_gemm(x, w.reshape(k, -1), activation=activation,
+                          out_dtype=x.dtype)
+    return out.reshape(x.shape[:-1] + w.shape[1:])
+
+
 def activation_fn(name: str):
     if name == "silu":
         return jax.nn.silu
@@ -144,7 +163,14 @@ def mlp_schema(d_model: int, d_ff: int, activation: str,
     return sch
 
 
-def apply_mlp(p: dict, x, activation: str):
+def apply_mlp(p: dict, x, activation: str, use_pallas: bool = False):
+    if use_pallas:
+        # activation fuses into the GEMM epilogue (no extra HBM round-trip)
+        up = pod_dense(x, p["up"],
+                       activation=None if "gate" in p else activation)
+        if "gate" in p:
+            up = pod_dense(x, p["gate"], activation=activation) * up
+        return pod_dense(up, p["down"])
     act = activation_fn(activation)
     up = jnp.einsum("...d,df->...f", x, p["up"])
     if "gate" in p:

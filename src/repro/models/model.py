@@ -70,12 +70,18 @@ class Model:
     def __init__(self, cfg: ArchConfig, attention_impl: str = "chunked",
                  ssd_impl: str = "jnp", kv_rep: int = 1,
                  constrain: Constrain | None = None, unroll: bool = False,
-                 remat: bool = False, kv_block: int = 1024):
+                 remat: bool = False, kv_block: int = 1024,
+                 use_pallas: bool = False):
         self.cfg = cfg
         self.impl = attention_impl
         self.ssd_impl = ssd_impl
         self.kv_rep = kv_rep
         self.constrain = constrain or (lambda x, kind: x)
+        # use_pallas routes dense/GQA projections + MLPs through the
+        # systolic pod GEMM kernel with DSE-autotuned block geometry
+        # (kernels/systolic_gemm; interpret mode off-TPU). Reference
+        # einsum path stays the default and the numerics oracle.
+        self.use_pallas = use_pallas
         # unroll=True replaces lax.scan with a Python loop over indexed
         # layer params — used by the dry-run's L1/L2 flop-calibration
         # compiles (XLA cost analysis counts a while body once; unrolled
@@ -162,7 +168,8 @@ class Model:
 
         def body(carry, p_layer):
             h, _ = apply_block(p_layer, carry, cfg, "encoder", positions=pos,
-                               impl=self.impl, causal=False)
+                               impl=self.impl, causal=False,
+                               use_pallas=self.use_pallas)
             return self.constrain(h, "residual"), None
 
         x, _ = self._scan(self._body(body), x, params["encoder"]["blocks"])
@@ -182,7 +189,8 @@ class Model:
         cfg = self.cfg
         kw = dict(positions=positions, impl=self.impl, ssd_impl=self.ssd_impl,
                   kv_rep=self.kv_rep, window=seg.window,
-                  kv_block=self.kv_block, constrain=self.constrain)
+                  kv_block=self.kv_block, constrain=self.constrain,
+                  use_pallas=self.use_pallas)
 
         if seg.kind == "vlm":
             return self._run_vlm_segment(seg, p_seg, x, cache_seg,
@@ -321,6 +329,18 @@ class Model:
         return cross_entropy_loss(logits, batch["labels"])
 
     # -- serving -----------------------------------------------------------
+    @property
+    def bucketed_prefill_ok(self) -> bool:
+        """True when prefill lanes can be right-padded to a bucket length
+        without corrupting serving state: attention-only KV/MLA caches are
+        inert under padding (causal masking + the engine's post-prefill
+        length fixup). SSM and ring (sliding-window) caches integrate the
+        padded positions into recurrent/rolled state, MoE capacity lets
+        padding tokens displace real ones, and encoder-decoder / VLM
+        prompts carry non-token modalities — all must prefill exact-length.
+        """
+        return self.cfg.family == "dense" and not self.cfg.encoder_decoder
+
     def init_cache(self, batch: int, max_len: int, src_len: int = 0,
                    dtype=jnp.bfloat16) -> dict:
         cfg = self.cfg

@@ -31,7 +31,8 @@ from ..configs.base import ArchConfig
 from . import attention as attn_mod
 from .attention import KVCache, RingKVCache, chunked_attention, decode_attention
 from .layers import (ParamSpec, apply_mlp, apply_norm, apply_rope, embed,
-                     mlp_schema, norm_schema, unembed, embed_schema)
+                     mlp_schema, norm_schema, pod_dense, unembed,
+                     embed_schema)
 from .moe import apply_moe, moe_schema
 from .ssm import SSMCache, apply_ssm, ssm_schema
 
@@ -114,14 +115,22 @@ def attn_schema(cfg: ArchConfig, layers: int | None) -> dict:
 
 def apply_gqa(p, x, cfg: ArchConfig, *, positions, causal=True, window=None,
               impl="chunked", cache: KVCache | RingKVCache | None = None,
-              kv_rep: int = 1, kv_x=None, kv_block: int = 1024):
+              kv_rep: int = 1, kv_x=None, kv_block: int = 1024,
+              use_pallas: bool = False):
     """GQA attention. Train/prefill when cache is None or being filled;
     decode when x has S == 1 and cache is not None.
-    kv_x: optional separate KV source (cross-attention)."""
+    kv_x: optional separate KV source (cross-attention).
+    use_pallas routes the q/k/v/o projections through the systolic pod
+    GEMM (layers.pod_dense, fused-lane form)."""
     src = kv_x if kv_x is not None else x
-    q = jnp.einsum("bsd,dhk->bshk", x, p["q"])
-    k = jnp.einsum("bsd,dhk->bshk", src, p["k"])
-    v = jnp.einsum("bsd,dhk->bshk", src, p["v"])
+    if use_pallas:
+        q = pod_dense(x, p["q"])
+        k = pod_dense(src, p["k"])
+        v = pod_dense(src, p["v"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["q"])
+        k = jnp.einsum("bsd,dhk->bshk", src, p["k"])
+        v = jnp.einsum("bsd,dhk->bshk", src, p["v"])
     if cfg.use_rope and kv_x is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -172,6 +181,9 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions, causal=True, window=None,
             attn_mod.attention(q, k, v, impl=impl, causal=causal, window=window)
     B, S = x.shape[0], x.shape[1]
     out = out.reshape(B, S, cfg.n_heads, -1)
+    if use_pallas:
+        o_w = p["o"].reshape(-1, p["o"].shape[-1])       # [(H hd), d]
+        return pod_dense(out.reshape(B, S, -1), o_w), new_cache
     return jnp.einsum("bshk,hkd->bsd", out, p["o"]), new_cache
 
 
@@ -308,11 +320,14 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
                 positions, window=None, impl="chunked", ssd_impl="jnp",
                 cache: dict | None = None, kv_rep: int = 1,
                 cross_src=None, causal=True, kv_block: int = 1024,
-                constrain=None):
+                constrain=None, use_pallas: bool = False):
     """One layer. cache: dict with keys subset of {attn, ssm, cross} or None.
     cross_src: source embeddings for cross-attention (encoder output /
     image embeddings); at decode the per-layer cross K/V come from the
-    cache instead. Returns (x, new_cache_dict)."""
+    cache instead. Returns (x, new_cache_dict).
+    use_pallas: dense/GQA projections + MLP run on the systolic pod GEMM
+    (MLA, MoE dispatch, SSM and the cross-attention q/o stay on the
+    reference einsum path)."""
     new_cache: dict = {}
 
     def _cross_kv():
@@ -346,14 +361,15 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
                        p["cross"]["o"])
         x = x + a
         h = apply_norm(p["ln_mlp"], x, cfg.norm)
-        return x + apply_mlp(p["mlp"], h, cfg.activation), new_cache
+        return x + apply_mlp(p["mlp"], h, cfg.activation,
+                             use_pallas=use_pallas), new_cache
 
     if kind == "hybrid":
         h = apply_norm(p["ln_attn"], x, cfg.norm)
         a, ac = apply_gqa(p["attn"], h, cfg, positions=positions,
                           causal=causal, window=window, impl=impl,
                           cache=cache.get("attn") if cache else None,
-                          kv_rep=kv_rep)
+                          kv_rep=kv_rep, use_pallas=use_pallas)
         s, sc = apply_ssm(p["ssm"], apply_norm(p["ln_ssm"], x, cfg.norm),
                           cfg, cache=cache.get("ssm") if cache else None,
                           impl=ssd_impl)
@@ -363,7 +379,8 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
             new_cache["ssm"] = sc
         x = x + 0.5 * (a + s)
         h = apply_norm(p["ln_mlp"], x, cfg.norm)
-        return x + apply_mlp(p["mlp"], h, cfg.activation), new_cache
+        return x + apply_mlp(p["mlp"], h, cfg.activation,
+                             use_pallas=use_pallas), new_cache
 
     # attention blocks (dense / moe / encoder / crossdec)
     h = apply_norm(p["ln_attn"], x, cfg.norm)
@@ -375,7 +392,8 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
         a, ac = apply_gqa(p["attn"], h, cfg, positions=positions,
                           causal=causal, window=window, impl=impl,
                           cache=cache.get("attn") if cache else None,
-                          kv_rep=kv_rep, kv_block=kv_block)
+                          kv_rep=kv_rep, kv_block=kv_block,
+                          use_pallas=use_pallas)
     if ac is not None:
         new_cache["attn"] = ac
     x = x + a
@@ -394,7 +412,7 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
     if kind == "moe":
         y = apply_moe(p["moe"], h, cfg, constrain=constrain)
     else:
-        y = apply_mlp(p["mlp"], h, cfg.activation)
+        y = apply_mlp(p["mlp"], h, cfg.activation, use_pallas=use_pallas)
     return x + y, new_cache
 
 

@@ -21,12 +21,13 @@ The paper's three pillars, applied at mesh scale (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 from ..configs.base import ArchConfig, ShapeConfig
 from ..core.arrays import ArrayConfig, AcceleratorConfig
 from ..core.simulator import analyze
-from ..core.tiling import GemmSpec
+from ..core.tiling import GemmSpec, tile_stats
 from ..core.workloads import transformer_lm
 
 MXU = 128  # TPU MXU dimension: the per-chip "pod" granularity
@@ -113,28 +114,85 @@ def choose_plan(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict
     return scored[0][0], [(p.describe(), s) for p, s in scored]
 
 
+# --------------------------------------------------------------------------
+# tile_stats-driven Pallas block autotuner
+# --------------------------------------------------------------------------
+#
+# The Pallas pod GEMM's (block_m, block_n, block_k) IS the paper's pod
+# geometry: block_k is the array's contraction rows, block_n its output
+# columns, block_m the activation rows streamed through per tile — so the
+# same closed-form tiling model that drives the chip-level DSE
+# (core.tiling.tile_stats with ArrayConfig(rows=block_k, cols=block_n),
+# k_part=block_m) gives the kernel's exact grid counts (n_i, n_j, n_l).
+# `choose_blocks` scores every candidate geometry with a roofline over
+# those counts and is lru-cached per (shape, dtype) — the per-shape cache
+# the serving hot loop relies on (one autotune per layer shape, ever).
+
+# MXU peak: one 128x128 MAC wave per cycle; HBM: ~1 KiB/cycle at ~1 GHz
+# (the v4-class ridge of ~16 MACs/byte — only the ratio matters here).
+_MACS_PER_CYCLE = 128 * 128
+_HBM_BYTES_PER_CYCLE = 1024
+_VMEM_BUDGET = 12 * 2 ** 20   # working-set ceiling of the ~16 MiB VMEM
+
+
+def _rup8(d: int) -> int:
+    return max(8, ((d + 7) // 8) * 8)
+
+
+@functools.lru_cache(maxsize=4096)
 def choose_blocks(m: int, k: int, n: int,
-                  candidates=(128, 256, 512)) -> tuple[int, int, int]:
-    """Pallas GEMM block sizes by the paper's effective-throughput metric:
-    utilization (edge waste) x memory-energy proxy (bytes per MAC)."""
-    best, best_score = (MXU, MXU, MXU), -1.0
+                  candidates=(128, 256, 512),
+                  dtype_bytes: int = 2, out_bytes: int = 4,
+                  vmem_budget: int = _VMEM_BUDGET) -> tuple[int, int, int]:
+    """Pallas GEMM block sizes for an (m x k) @ (k x n) GEMM, chosen by the
+    SOSA DSE cost model (see kernels/systolic_gemm/systolic_gemm.py for the
+    full autotuner contract).
+
+    For each candidate (bm, bn, bk) the kernel-effective geometry (blocks
+    clipped to the padded problem, exactly as ops.systolic_gemm clips) is
+    scored as a roofline: max(padded-MAC compute time, HBM stream time)
+    over `tile_stats`' closed-form grid counts, subject to the VMEM budget
+    (double-buffered x/w blocks + accumulator + output block). Returns the
+    best (block_m, block_n, block_k); results are lru-cached per shape.
+    """
+    # selection key: roofline time, then HBM traffic (a compute-bound tie
+    # must not pick the max-traffic geometry), then VMEM footprint
+    best, best_key = (MXU, MXU, MXU), (float("inf"),) * 3
+    seen_eff: set[tuple[int, int, int]] = set()
+    spec = [GemmSpec(d1=m, d2=k, d3=n)]
     for bm in candidates:
         for bn in candidates:
             for bk in candidates:
-                tiles_m, tiles_n, tiles_k = (math.ceil(m / bm),
-                                             math.ceil(n / bn),
-                                             math.ceil(k / bk))
-                util = (m * n * k) / (tiles_m * bm * tiles_n * bn *
-                                      tiles_k * bk)
-                # bytes/MAC ~ 1/bm + 1/bn + 1/bk (edge traffic per block)
-                mem = 1.0 / bm + 1.0 / bn + 1.0 / bk
-                # VMEM: 3 buffers x (bm*bk + bk*bn + bm*bn) x 2B must fit
-                vmem = 2 * 3 * (bm * bk + bk * bn + bm * bn)
-                if vmem > 12 * 2 ** 20:
+                # kernel-effective blocks (ops.systolic_gemm clips the same
+                # way: min(block, sublane-rounded dim))
+                bm_e = min(bm, _rup8(m))
+                bn_e = min(bn, _rup8(n))
+                bk_e = min(bk, _rup8(k))
+                if (bm_e, bn_e, bk_e) in seen_eff:
                     continue
-                score = util / (1.0 + 64 * mem)
-                if score > best_score:
-                    best, best_score = (bm, bn, bk), score
+                seen_eff.add((bm_e, bn_e, bk_e))
+                # VMEM working set: double-buffered streaming blocks + the
+                # f32/int32 accumulator scratch + the output block
+                vmem = (2 * (bm_e * bk_e + bk_e * bn_e) * dtype_bytes
+                        + bm_e * bn_e * (4 + out_bytes))
+                if vmem > vmem_budget:
+                    continue
+                st = tile_stats(spec, ArrayConfig(rows=bk_e, cols=bn_e),
+                                k_part=bm_e)
+                n_i, n_j, n_l = (int(st.n_i[0]), int(st.n_j[0]),
+                                 int(st.n_l[0]))
+                padded_macs = (n_i * bm_e) * (n_j * bk_e) * (n_l * bn_e)
+                # HBM traffic of the kernel's K-minor grid walk: every
+                # (i, j, l) step streams one x and one w block; outputs
+                # write once per (i, l)
+                traffic = (n_i * n_l * n_j * (bm_e * bk_e + bk_e * bn_e)
+                           * dtype_bytes
+                           + n_i * n_l * bm_e * bn_e * out_bytes)
+                t = max(padded_macs / _MACS_PER_CYCLE,
+                        traffic / _HBM_BYTES_PER_CYCLE)
+                key = (t, traffic, vmem)
+                if key < best_key:
+                    best, best_key = (bm, bn, bk), key
     return best
 
 

@@ -1,1 +1,2 @@
 from .engine import Request, ServeEngine
+from .reference import ReferenceEngine

@@ -1,32 +1,54 @@
-"""Batched serving engine: continuous batching over prefill + decode.
+"""Batched serving engine: continuous batching with an on-device hot loop.
 
 The engine owns a fixed decode batch of `slots`; requests queue, prefill
 into a free slot's cache lane, and decode step-locked with the rest of the
-batch (the standard continuous-batching pattern). Per-slot caches live in
-one batched cache pytree — slot insertion is a dynamic_update along the
-batch axis, so the whole engine is jit-compatible and shardable (batch axis
-over the DP mesh axes).
+batch. Two optimizations move the hot loop on-device (seed behavior is
+preserved bit-for-bit in serve/reference.py as the oracle):
+
+  * **Bucketed prefill** — prompts are right-padded to power-of-two length
+    buckets, and queued requests of the same bucket batch into ONE prefill
+    call over a fixed `slots`-lane batch. The jit cache is therefore
+    bounded by the number of buckets (<= log2(max_len) variants) instead of
+    one entry per distinct prompt length. Padding is inert for
+    attention-only caches: causal masking keeps padded positions out of
+    real positions' math, and a post-prefill length fixup masks the padded
+    cache slots until decode overwrites them. Models whose state integrates
+    padding (SSM, ring buffers, MoE capacity, encoder-decoder/VLM inputs)
+    fall back to exact-length prefill (see Model.bucketed_prefill_ok).
+
+  * **Fused multi-token decode** — a `lax.scan` of up to `decode_chunk`
+    decode steps runs in one device call, carrying tokens / positions /
+    budgets / EOS-alive masks as device arrays. The host syncs once per
+    chunk (the admission boundary), not once per token. Chunk lengths are
+    floored to powers of two so the decode jit cache stays bounded by
+    log2(decode_chunk) variants. When the queue is non-empty the chunk is
+    sized to the soonest-finishing lane so freed slots admit promptly;
+    when the queue is drained, to the latest-finishing lane.
 
 SOSA tie-in (§6.1 multi-tenancy): co-scheduling independent request
 streams is exactly the paper's multi-tenant utilization argument — decode
-GEMVs from many requests fuse into one batched GEMM, raising tiles/pod.
-Pass `tracer=tenancy.ServeTraceRecorder()` to record the engine's actual
-prefill/decode timeline; `tenancy/trace.py` lowers it to a GemmSpec tenant
-for the co-schedule planner (tenancy/planner.py), and
-`benchmarks/multitenancy.py` quantifies the co-scheduling gain with the
-simulator.
+GEMVs from many requests fuse into one batched GEMM, raising tiles/pod
+(and with Model(use_pallas=True) they literally execute as one fused-lane
+pod GEMM, kernels/systolic_gemm). Pass
+`tracer=tenancy.ServeTraceRecorder()` to record the engine's actual
+prefill/decode timeline; events are emitted in the same step-locked order
+as the seed engine (decode events are reconstructed per scan step from the
+chunk's emit masks), so `tenancy/trace.py` lowers them unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models.attention import KVCache
 from ..models.model import Model
+from ..models.transformer import MLACache
 
 
 @dataclasses.dataclass
@@ -36,91 +58,264 @@ class Request:
     max_new_tokens: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # extra prefill-batch arrays (batch-dim included), e.g. whisper frames
+    # {"frames": [1, src_len, d_model]} — merged into the prefill batch;
+    # requests with extras always prefill exact-length (per-request shapes
+    # can't join a shared bucket batch)
+    extras: dict = dataclasses.field(default_factory=dict)
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, slots: int = 4,
                  max_len: int = 512, src_len: int = 0,
-                 eos_id: Optional[int] = None, tracer=None):
+                 eos_id: Optional[int] = None, tracer=None,
+                 decode_chunk: int = 8, prefill_buckets: bool = True,
+                 min_bucket: int = 8):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.src_len = src_len
         self.eos_id = eos_id
         # optional duck-typed event sink (tenancy.ServeTraceRecorder): gets
         # on_prefill(rid, prompt_len) / on_decode(lanes, contexts) in the
         # engine's step-locked order
         self.tracer = tracer
+        self.decode_chunk = max(1, decode_chunk)
+        self.min_bucket = max(1, min_bucket)
+        self.bucketed = bool(prefill_buckets) and model.bucketed_prefill_ok
         self.cache = model.init_cache(slots, max_len, src_len=src_len)
         self.active: list[Optional[Request]] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
         self.budgets = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
-        self._decode = jax.jit(model.decode_step)
+        self._buckets_seen: set[int] = set()
+        self._batch_axes = self._probe_batch_axes()
+        self._prefill_fn = jax.jit(self._prefill_batched_impl)
+        self._decode_fn = jax.jit(self._decode_chunk_impl,
+                                  static_argnames=("n",))
 
     # -- request flow --------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _bucket(self, prompt_len: int) -> int:
+        b = max(self.min_bucket, prompt_len)
+        b = 1 << (b - 1).bit_length()                # next power of two
+        return min(b, self.max_len)
 
     def _admit(self) -> None:
         while self.queue:
-            slot = self._free_slot()
-            if slot is None:
+            free = self._free_slots()
+            if not free:
                 return
-            req = self.queue.pop(0)
-            self._prefill_into(slot, req)
+            if not self.bucketed or self.queue[0].extras:
+                # extras carry per-request shapes (e.g. frames) that can't
+                # join a shared bucket batch: prefill them exact-length
+                self._prefill_into(free[0], self.queue.pop(0))
+                continue
+            # group the head-of-queue bucket: every queued request of the
+            # same bucket rides the same prefill call (up to free slots)
+            b = self._bucket(len(self.queue[0].prompt))
+            take: list[Request] = []
+            rest: list[Request] = []
+            for r in self.queue:
+                if len(take) < len(free) and not r.extras and \
+                        self._bucket(len(r.prompt)) == b:
+                    take.append(r)
+                else:
+                    rest.append(r)
+            self.queue = rest
+            self._prefill_group(take, free[: len(take)], b)
 
+    # -- bucketed prefill ------------------------------------------------
+    def _probe_batch_axes(self):
+        """Per-leaf batch axis of the cache pytree, found by diffing a
+        1-lane cache against the slots-lane cache (static metadata; makes
+        lane insertion exact instead of shape-guessed)."""
+        if self.slots == 1:
+            return jax.tree.map(lambda a: 0, self.cache)
+        ref1 = self.model.init_cache(1, self.max_len, src_len=self.src_len)
+
+        def axis(big, small):
+            for ax in range(big.ndim):
+                if big.shape[ax] != small.shape[ax]:
+                    return ax
+            return 0
+        return jax.tree.map(axis, self.cache, ref1)
+
+    def _prefill_group(self, reqs: list[Request], slot_list: list[int],
+                       bucket: int) -> None:
+        toks = np.zeros((self.slots, bucket), np.int32)
+        true_lens = np.ones(self.slots, np.int32)      # pad lanes: len 1
+        slot_ids = np.full(self.slots, -1, np.int32)
+        for g, (r, s) in enumerate(zip(reqs, slot_list)):
+            S = len(r.prompt)
+            toks[g, :S] = r.prompt
+            true_lens[g] = S
+            slot_ids[g] = s
+            if self.tracer is not None:
+                self.tracer.on_prefill(r.rid, S)
+        self._buckets_seen.add(bucket)
+        first, self.cache = self._prefill_fn(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(slot_ids), jnp.asarray(true_lens))
+        first = np.asarray(first)
+        for g, (r, s) in enumerate(zip(reqs, slot_list)):
+            r.out.append(int(first[g]))
+            self.active[s] = r
+            self.positions[s] = len(r.prompt)
+            self.budgets[s] = self._clamped_budget(r)
+            self._retire_if_full(s)
+
+    def _prefill_batched_impl(self, params, tokens, big_cache, slot_ids,
+                              true_lens):
+        """One jitted prefill over a fixed [slots, bucket] token batch:
+        forward, per-lane last-real-position logits, per-lane length fixup,
+        and scatter of each real lane into its slot of the batched cache.
+        Compiles once per bucket (tokens' trailing dim is the only varying
+        shape)."""
+        lane_cache = self.model.init_cache(self.slots, self.max_len,
+                                           src_len=self.src_len)
+        logits, lane_cache = self.model.forward(params, {"tokens": tokens},
+                                                cache=lane_cache)
+        idx = jnp.maximum(true_lens - 1, 0)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+        first_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        lane_cache = _fix_lengths(lane_cache, true_lens)
+        cache = big_cache
+        for g in range(self.slots):                   # static unroll
+            valid = slot_ids[g] >= 0
+            slot = jnp.maximum(slot_ids[g], 0)
+            cache = jax.tree.map(
+                lambda big, lane, ax, v=valid, s=slot, g=g: jnp.where(
+                    v,
+                    jax.lax.dynamic_update_slice_in_dim(
+                        big,
+                        jax.lax.dynamic_slice_in_dim(lane, g, 1, axis=ax
+                                                     ).astype(big.dtype),
+                        s, axis=ax),
+                    big),
+                cache, lane_cache, self._batch_axes)
+        return first_tok, cache
+
+    # -- exact-length prefill (SSM / ring / cross / MoE families) --------
     def _prefill_into(self, slot: int, req: Request) -> None:
-        """Prefill a single request into one slot lane of the batched cache
-        (single-lane prefill batch; production would group same-length
-        prompts — the batching policy is orthogonal to the cache layout)."""
+        """Prefill a single request into one slot lane of the batched
+        cache. The lane cache is built with the engine's src_len so
+        encoder-decoder cross-KV lanes line up with the batched cache
+        (regression: the seed dropped src_len here)."""
         S = len(req.prompt)
         if self.tracer is not None:
             self.tracer.on_prefill(req.rid, S)
-        lane_cache = self.model.init_cache(1, self.max_len)
-        logits, lane_cache = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt)[None, :]},
-            lane_cache)
+        self._buckets_seen.add(S)     # exact-length path: one shape per len
+        lane_cache = self.model.init_cache(1, self.max_len,
+                                           src_len=self.src_len)
+        batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        for key, val in req.extras.items():
+            batch[key] = jnp.asarray(val)
+        logits, lane_cache = self.model.prefill(self.params, batch,
+                                                lane_cache)
         self.cache = _write_lane(self.cache, lane_cache, slot)
-        tok = int(jnp.argmax(logits[0]))
-        req.out.append(tok)
+        req.out.append(int(jnp.argmax(logits[0])))
         self.active[slot] = req
         self.positions[slot] = S
-        self.budgets[slot] = req.max_new_tokens - 1
+        self.budgets[slot] = self._clamped_budget(req)
+        self._retire_if_full(slot)
 
-    # -- decode loop -----------------------------------------------------
+    def _clamped_budget(self, req: Request) -> int:
+        """Decode steps this request may take: its budget, clamped so the
+        lane never appends past max_len (an oversized request degrades to
+        a shorter completion instead of silently rewriting its last KV
+        slot)."""
+        return min(req.max_new_tokens - 1,
+                   max(0, self.max_len - len(req.prompt)))
+
+    def _retire_if_full(self, slot: int) -> None:
+        """A prompt that fills the cache leaves no room for even the one
+        forced decode step of a budget-0 lane — retire it with just the
+        prefill token instead of letting the append clobber the last KV
+        slot."""
+        if self.positions[slot] >= self.max_len:
+            self.active[slot].done = True
+            self.active[slot] = None
+
+    # -- fused decode loop ------------------------------------------------
+    def _decode_chunk_impl(self, params, cache, toks, pos, bud, alive, *,
+                           n: int):
+        """n fused decode steps as one lax.scan on device. Carries the
+        batched cache + per-lane (token, position, budget, alive) vectors;
+        emits the per-step greedy tokens and emit masks. A lane whose
+        budget runs out (or that hits eos) drops out of the emit mask but
+        keeps decoding inertly until the chunk ends — its slot is freed at
+        the next admission boundary and prefill fully rewrites the lane."""
+        eos = self.eos_id
+
+        def step(carry, _):
+            cache, toks, pos, bud, alive = carry
+            logits, cache = self.model.decode_step(params, toks, cache, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            emit = alive
+            toks = jnp.where(emit, nxt, toks)
+            bud = bud - emit.astype(bud.dtype)
+            done = bud <= 0
+            if eos is not None:
+                done = done | (nxt == eos)
+            alive = alive & ~done
+            pos = pos + 1
+            return (cache, toks, pos, bud, alive), (toks, emit)
+
+        (cache, *_), (seq, emits) = jax.lax.scan(
+            step, (cache, toks, pos, bud, alive), None, length=n)
+        return cache, seq, emits
+
+    def _chunk_len(self, live: list[int]) -> int:
+        # queue waiting -> sync at the soonest lane completion (admit
+        # early); queue drained -> run to the latest lane (fewest syncs)
+        rem = [max(1, int(self.budgets[i])) for i in live]
+        need = min(rem) if self.queue else max(rem)
+        room = min(int(self.max_len - self.positions[i]) for i in live)
+        n = max(1, min(self.decode_chunk, need, max(1, room)))
+        # pow2 floor: <= log2(decode_chunk)+1 compiled chunk variants
+        return 1 << (n.bit_length() - 1)
+
     def step(self) -> int:
-        """One step-locked decode over all active slots. Returns #active."""
+        """One scheduling quantum: admission, then one fused decode chunk.
+        Returns the number of lanes live at the chunk start."""
         self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
-        if self.tracer is not None:
-            self.tracer.on_decode(len(live),
-                                  [int(self.positions[i]) for i in live])
+        n = self._chunk_len(live)
         toks = np.zeros(self.slots, np.int32)
+        alive0 = np.zeros(self.slots, bool)
         for i in live:
             toks[i] = self.active[i].out[-1]
-        # per-lane positions: mixed-length requests decode together, each
-        # lane masked by its own cache length (continuous batching)
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.positions))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            alive0[i] = True
+        pos0 = self.positions.copy()
+        self.cache, seq, emits = self._decode_fn(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos0),
+            jnp.asarray(self.budgets), jnp.asarray(alive0), n=n)
+        seq = np.asarray(seq)                         # the ONE host sync
+        emits = np.asarray(emits)
+        if self.tracer is not None:                   # step-locked replay
+            for s in range(n):
+                lanes = [i for i in live if emits[s, i]]
+                if lanes:
+                    self.tracer.on_decode(
+                        len(lanes), [int(pos0[i]) + s for i in lanes])
         for i in live:
             r = self.active[i]
-            tok = int(nxt[i])
-            r.out.append(tok)
-            self.positions[i] += 1
-            self.budgets[i] -= 1
-            if self.budgets[i] <= 0 or (self.eos_id is not None
-                                        and tok == self.eos_id):
+            cnt = int(emits[:, i].sum())
+            r.out.extend(int(seq[s, i]) for s in range(cnt))
+            self.positions[i] += cnt
+            self.budgets[i] -= cnt
+            hit_eos = (self.eos_id is not None and cnt > 0
+                       and int(seq[cnt - 1, i]) == self.eos_id)
+            if self.budgets[i] <= 0 or hit_eos:
                 r.done = True
                 self.active[i] = None
         return len(live)
@@ -130,6 +325,38 @@ class ServeEngine:
             if not self.queue and not any(self.active):
                 return
             self.step()
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shape variants: buckets hit on the bucketed
+        path (where the regression gate is <= log2(max_len)), distinct
+        prompt lengths on the exact-length fallback (unbounded by
+        construction — the quantity the gate exists to expose)."""
+        if self.bucketed:
+            try:
+                return int(self._prefill_fn._cache_size())
+            except AttributeError:                    # pragma: no cover
+                return len(self._buckets_seen)
+        return len(self._buckets_seen)
+
+    @property
+    def max_prefill_compiles(self) -> int:
+        return max(1, int(math.log2(self.max_len)))
+
+
+def _fix_lengths(cache, true_lens):
+    """Reset per-lane cache lengths from the padded bucket length to the
+    true prompt lengths, so padded slots stay masked until decode appends
+    overwrite them (the bucketed-prefill correctness fixup)."""
+    def fix(node):
+        if isinstance(node, (KVCache, MLACache)):
+            length = jnp.broadcast_to(
+                true_lens.astype(node.length.dtype), node.length.shape)
+            return dataclasses.replace(node, length=length)
+        return node
+    return jax.tree.map(
+        fix, cache, is_leaf=lambda x: isinstance(x, (KVCache, MLACache)))
 
 
 def _write_lane(batched_cache, lane_cache, slot: int):

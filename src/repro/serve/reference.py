@@ -1,0 +1,127 @@
+"""Reference serving engine: the seed per-step hot loop, kept as the
+scalar oracle for the optimized engine in serve/engine.py.
+
+One eager prefill per request (recompiling/redispatching for every distinct
+prompt length) and one host round-trip per decoded token — exactly the
+behavior benchmarks/serving.py quantifies the bucketed + fused engine
+against. Output semantics are the contract both engines share:
+`Request.out` holds max_new_tokens greedy tokens (first from prefill),
+truncated at eos_id inclusive.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from .engine import Request, _write_lane
+
+
+class ReferenceEngine:
+    """Seed ServeEngine: step-locked continuous batching, host-synced per
+    token. `jit_prefill=True` jits the prefill call (used by the serving
+    benchmark so compile counts are observable via `_cache_size`)."""
+
+    def __init__(self, model: Model, params, slots: int = 4,
+                 max_len: int = 512, src_len: int = 0,
+                 eos_id: Optional[int] = None, tracer=None,
+                 jit_prefill: bool = False):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.src_len = src_len
+        self.eos_id = eos_id
+        self.tracer = tracer
+        self.cache = model.init_cache(slots, max_len, src_len=src_len)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.positions = np.zeros(slots, np.int32)
+        self.budgets = np.zeros(slots, np.int32)
+        self.queue: list[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill) if jit_prefill \
+            else model.prefill
+
+    # -- request flow --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request) -> None:
+        """Prefill a single request into one slot lane of the batched
+        cache. The lane cache is built with the engine's src_len so
+        encoder-decoder cross-KV lanes line up with the batched cache."""
+        S = len(req.prompt)
+        if self.tracer is not None:
+            self.tracer.on_prefill(req.rid, S)
+        lane_cache = self.model.init_cache(1, self.max_len,
+                                           src_len=self.src_len)
+        batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
+        for key, val in req.extras.items():
+            batch[key] = jnp.asarray(val)
+        logits, lane_cache = self._prefill(self.params, batch, lane_cache)
+        self.cache = _write_lane(self.cache, lane_cache, slot)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self.active[slot] = req
+        self.positions[slot] = S
+        # clamp so the lane never appends past max_len (oversized requests
+        # degrade to shorter completions, matching serve/engine.py); a
+        # prompt that fills the cache retires with just the prefill token
+        self.budgets[slot] = min(req.max_new_tokens - 1,
+                                 max(0, self.max_len - S))
+        if S >= self.max_len:
+            req.done = True
+            self.active[slot] = None
+
+    # -- decode loop -----------------------------------------------------
+    def step(self) -> int:
+        """One step-locked decode over all active slots. Returns #active."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        if self.tracer is not None:
+            self.tracer.on_decode(len(live),
+                                  [int(self.positions[i]) for i in live])
+        toks = np.zeros(self.slots, np.int32)
+        for i in live:
+            toks[i] = self.active[i].out[-1]
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.positions))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in live:
+            r = self.active[i]
+            tok = int(nxt[i])
+            r.out.append(tok)
+            self.positions[i] += 1
+            self.budgets[i] -= 1
+            if self.budgets[i] <= 0 or (self.eos_id is not None
+                                        and tok == self.eos_id):
+                r.done = True
+                self.active[i] = None
+        return len(live)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and not any(self.active):
+                return
+            self.step()

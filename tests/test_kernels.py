@@ -15,7 +15,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.ssd.ops import ssd
 from repro.kernels.ssd.ref import ssd_ref
-from repro.kernels.systolic_gemm.ops import systolic_gemm
+from repro.kernels.systolic_gemm.ops import (fused_lane_gemm, grouped_gemm,
+                                             systolic_gemm)
 from repro.kernels.systolic_gemm.ref import systolic_gemm_ref
 
 RNG = np.random.default_rng(42)
@@ -84,6 +85,59 @@ def test_systolic_gemm_property(m, k, n):
                         interpret=True)
     ref = systolic_gemm_ref(x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# grouped / fused-lane GEMM variants
+# --------------------------------------------------------------------------
+
+GROUPED_SHAPES = [(2, 32, 40, 24), (3, 64, 64, 64), (1, 5, 130, 17),
+                  (4, 33, 17, 65)]
+
+
+@pytest.mark.parametrize("shape", GROUPED_SHAPES)
+@pytest.mark.parametrize("dtype", ["int8", "float32"])
+def test_grouped_gemm_matches_per_group_ref(shape, dtype):
+    """G independent GEMMs in one launch == per-group oracle."""
+    G, M, K, N = shape
+    if dtype == "int8":
+        x = jnp.asarray(RNG.integers(-50, 50, (G, M, K)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-50, 50, (G, K, N)), jnp.int8)
+    else:
+        x = jnp.asarray(RNG.standard_normal((G, M, K)), jnp.float32)
+        w = jnp.asarray(RNG.standard_normal((G, K, N)), jnp.float32)
+    out = grouped_gemm(x, w, interpret=True)
+    ref = jnp.stack([systolic_gemm_ref(x[g], w[g]) for g in range(G)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_grouped_gemm_per_group_epilogue():
+    """Per-group dequant scale + bias + activation (the SIMD
+    post-processor, one per pod group)."""
+    G, M, K, N = 3, 24, 48, 40
+    x = jnp.asarray(RNG.integers(-40, 40, (G, M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-40, 40, (G, K, N)), jnp.int8)
+    s = jnp.asarray(RNG.random((G, N)) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((G, N)), jnp.float32)
+    out = grouped_gemm(x, w, s, b, activation="silu", interpret=True)
+    ref = jnp.stack([systolic_gemm_ref(x[g], w[g], s[g], b[g],
+                                       activation="silu")
+                     for g in range(G)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fused_lane_gemm_collapses_leading_axes():
+    """[B, S, K] @ [K, N] runs as one (B*S, K) GEMM — the fused decode-lane
+    shape — and restores the leading axes."""
+    x = jnp.asarray(RNG.standard_normal((4, 3, 32)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((32, 24)), jnp.float32)
+    out = fused_lane_gemm(x, w, interpret=True)
+    assert out.shape == (4, 3, 24)
+    ref = jnp.einsum("bsk,kn->bsn", x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
 
 
 # --------------------------------------------------------------------------

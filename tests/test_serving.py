@@ -1,0 +1,315 @@
+"""Serving execution backend tests: bucketed prefill + fused decode engine
+vs the seed reference engine (the oracle), Pallas-path logits parity, the
+jit-compile-count regression gate, the src_len threading regression, the
+block autotuner, and the benchmark JSON schema."""
+
+import importlib.util
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models.model import Model
+from repro.parallel.autoshard import choose_blocks
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.reference import ReferenceEngine
+
+
+def _setup(arch="granite-8b", seed=0, **model_kw):
+    cfg = reduced(get_arch(arch))
+    model = Model(cfg, **model_kw)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _run(engine_cls, model, params, prompts, max_new=4, **kw):
+    eng = engine_cls(model, params, **kw)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=500)
+    assert all(r.done for r in reqs)
+    return eng, {r.rid: r.out for r in reqs}
+
+
+# --------------------------------------------------------------------------
+# bucketed + fused engine == seed oracle
+# --------------------------------------------------------------------------
+
+def test_bucketed_engine_matches_reference_mixed_lengths():
+    """Same greedy tokens from the on-device hot loop and the seed
+    per-token engine, across mixed prompt lengths and buckets."""
+    cfg, model, params = _setup(seed=3)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 9, 3, 17, 12, 33)]
+    _, ref = _run(ReferenceEngine, model, params, prompts,
+                  slots=2, max_len=64)
+    eng, new = _run(ServeEngine, model, params, prompts,
+                    slots=2, max_len=64)
+    assert eng.bucketed
+    assert new == ref
+
+
+def test_fused_decode_mixed_budgets():
+    """Lanes with different budgets finish at the right lengths even when
+    they share fused decode chunks."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(model, params, slots=3, max_len=64, decode_chunk=8)
+    budgets = [2, 7, 5, 1, 9]
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4 + i,
+                                               dtype=np.int32),
+                    max_new_tokens=b)
+            for i, b in enumerate(budgets)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=100)
+    for r, b in zip(reqs, budgets):
+        # seed semantics: prefill token + max(1, max_new - 1) decode steps
+        assert r.done and len(r.out) == max(2, b), (r.rid, len(r.out), b)
+
+
+def test_fused_decode_eos_truncates():
+    """EOS inside a fused chunk stops the lane at the eos token (inclusive)
+    and matches the reference engine's eos behavior."""
+    cfg, model, params = _setup(seed=5)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32) for n in (6, 11)]
+    _, free = _run(ReferenceEngine, model, params, prompts, max_new=8,
+                   slots=2, max_len=64)
+    eos = free[0][2]          # third greedy token of request 0 becomes eos
+    _, ref = _run(ReferenceEngine, model, params, prompts, max_new=8,
+                  slots=2, max_len=64, eos_id=eos)
+    _, new = _run(ServeEngine, model, params, prompts, max_new=8,
+                  slots=2, max_len=64, eos_id=eos)
+    assert new == ref
+    assert new[0][-1] == eos and len(new[0]) <= 3
+
+
+def test_prompt_filling_cache_retires_without_decode():
+    """A prompt of length max_len leaves no room for a decode append: the
+    lane must retire with just the prefill token, never clobber the last
+    KV slot (both engines)."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, 16, dtype=np.int32),
+               rng.integers(0, cfg.vocab, 5, dtype=np.int32)]
+    outs = {}
+    for cls in (ServeEngine, ReferenceEngine):
+        _, out = _run(cls, model, params, prompts, max_new=4,
+                      slots=2, max_len=16)
+        assert len(out[0]) == 1          # prefill token only, cache intact
+        assert len(out[1]) == 4
+        outs[cls.__name__] = out
+    assert outs["ServeEngine"] == outs["ReferenceEngine"]
+
+
+def test_requests_with_extras_skip_the_bucket_batch():
+    """extras carry per-request shapes: they must ride the exact-length
+    prefill path even on a bucketed engine (never silently dropped)."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(model, params, slots=2, max_len=32)
+    assert eng.bucketed
+    reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab, 6,
+                                               dtype=np.int32),
+                    max_new_tokens=3, extras={"unused": np.zeros((1, 2))}),
+            Request(rid=1, prompt=rng.integers(0, cfg.vocab, 7,
+                                               dtype=np.int32),
+                    max_new_tokens=3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=50)
+    assert all(r.done and len(r.out) == 3 for r in reqs)
+    # the extras request went down the exact-length path (recorded by
+    # prompt length, not bucket)
+    assert 6 in eng._buckets_seen
+
+
+# --------------------------------------------------------------------------
+# jit compile-count regression (the bounded-bucket guarantee)
+# --------------------------------------------------------------------------
+
+def test_prefill_compile_count_bounded():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    lengths = (3, 4, 5, 7, 9, 12, 17, 25, 31, 33, 48)   # 11 distinct
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in lengths]
+    eng, _ = _run(ServeEngine, model, params, prompts, max_new=2,
+                  slots=2, max_len=64)
+    # bucketed prefill compiles one variant per pow2 bucket, never one per
+    # prompt length: <= log2(max_len) on any workload
+    assert eng.prefill_compiles <= int(math.log2(64))
+    assert eng.prefill_compiles < len(set(lengths))
+    # the actual jit cache (not just engine bookkeeping) is bounded too
+    assert eng.prefill_compiles == len(eng._buckets_seen)
+
+
+def test_decode_chunk_compile_count_bounded():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 4 + i, dtype=np.int32)
+               for i in range(6)]
+    eng, _ = _run(ServeEngine, model, params, prompts, max_new=11,
+                  slots=2, max_len=64, decode_chunk=8)
+    # pow2-floored chunks: at most log2(decode_chunk)+1 compiled variants
+    assert eng._decode_fn._cache_size() <= int(math.log2(8)) + 1
+
+
+# --------------------------------------------------------------------------
+# src_len threading (seed regression: _prefill_into dropped src_len)
+# --------------------------------------------------------------------------
+
+def test_prefill_threads_src_len_encoder_decoder():
+    cfg, model, params = _setup("whisper-small")
+    src_len = 8
+    eng = ServeEngine(model, params, slots=2, max_len=32, src_len=src_len)
+    rng = np.random.default_rng(0)
+    frames = rng.standard_normal((1, src_len, cfg.d_model)).astype(
+        np.float32)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 4 + i,
+                                               dtype=np.int32),
+                    max_new_tokens=4, extras={"frames": frames})
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=50)
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    # the cross K/V lanes were actually written (the seed bug left the
+    # batched cross cache silently untouched / shape-mismatched)
+    ck = np.asarray(eng.cache["dec"]["cross"].k, np.float32)
+    assert ck.shape[-3] == src_len
+    assert np.abs(ck).sum() > 0
+
+
+def test_reference_engine_threads_src_len_too():
+    cfg, model, params = _setup("whisper-small")
+    eng = ReferenceEngine(model, params, slots=2, max_len=32, src_len=8)
+    rng = np.random.default_rng(0)
+    frames = rng.standard_normal((1, 8, cfg.d_model)).astype(np.float32)
+    r = Request(rid=0, prompt=rng.integers(0, cfg.vocab, 5, dtype=np.int32),
+                max_new_tokens=3, extras={"frames": frames})
+    eng.submit(r)
+    eng.run_to_completion(max_steps=50)
+    assert r.done and len(r.out) == 3
+    assert np.abs(np.asarray(eng.cache["dec"]["cross"].k,
+                             np.float32)).sum() > 0
+
+
+# --------------------------------------------------------------------------
+# use_pallas execution backend: logits parity with the reference path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-8b", "minitron-8b"])
+def test_pallas_backend_logits_parity(arch):
+    """Model(use_pallas=True) == reference einsum path within bf16
+    accumulation noise, prefill and decode (interpret mode on CPU)."""
+    cfg = reduced(get_arch(arch))
+    mref = Model(cfg)
+    mpal = Model(cfg, use_pallas=True)
+    params = mref.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)),
+                                   jnp.int32)}
+    l_ref, _ = mref.forward(params, batch)
+    l_pal, _ = mpal.forward(params, batch)
+    scale = float(np.abs(np.asarray(l_ref, np.float32)).max())
+    np.testing.assert_allclose(np.asarray(l_pal, np.float32),
+                               np.asarray(l_ref, np.float32),
+                               atol=0.05 * scale, rtol=0.1)
+
+    c_ref = mref.init_cache(2, 16)
+    c_pal = mpal.init_cache(2, 16)
+    _, c_ref = mref.prefill(params, batch, c_ref)
+    _, c_pal = mpal.prefill(params, batch, c_pal)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    d_ref, _ = mref.decode_step(params, tok, c_ref, 8)
+    d_pal, _ = mpal.decode_step(params, tok, c_pal, 8)
+    np.testing.assert_allclose(np.asarray(d_pal, np.float32),
+                               np.asarray(d_ref, np.float32),
+                               atol=0.05 * scale, rtol=0.1)
+
+
+def test_pallas_backend_serves_end_to_end():
+    """The engine runs on the Pallas execution backend (interpret mode)."""
+    cfg, model, params = _setup(use_pallas=True)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32) for n in (4, 7)]
+    eng, out = _run(ServeEngine, model, params, prompts, max_new=3,
+                    slots=2, max_len=32)
+    for toks in out.values():
+        assert len(toks) == 3
+        assert all(0 <= t < cfg.vocab for t in toks)
+
+
+# --------------------------------------------------------------------------
+# tile_stats-driven block autotuner
+# --------------------------------------------------------------------------
+
+def test_choose_blocks_vmem_feasible_and_cached():
+    candidates = (128, 256, 512)
+    before = choose_blocks.cache_info().hits
+    bm, bn, bk = choose_blocks(4096, 4096, 4096)
+    assert all(b in candidates for b in (bm, bn, bk))
+    # VMEM working set of the chosen geometry under the 12 MiB budget
+    vmem = 2 * (bm * bk + bk * bn) * 2 + bm * bn * (4 + 4)
+    assert vmem <= 12 * 2 ** 20
+    choose_blocks(4096, 4096, 4096)                 # per-shape cache hit
+    assert choose_blocks.cache_info().hits > before
+
+
+def test_choose_blocks_drives_kernel_and_stays_exact():
+    """Autotuned (default) blocks must not change the GEMM result."""
+    from repro.kernels.systolic_gemm.ops import systolic_gemm
+    from repro.kernels.systolic_gemm.ref import systolic_gemm_ref
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-50, 50, (100, 130)), jnp.int8)
+    w = jnp.asarray(rng.integers(-50, 50, (130, 70)), jnp.int8)
+    out = systolic_gemm(x, w, interpret=True)       # blocks=None -> DSE
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(systolic_gemm_ref(x, w)),
+                               rtol=1e-6)
+
+
+def test_choose_blocks_memory_bound_prefers_wide_n():
+    """A skinny decode GEMM (tiny M) is HBM-bound on activations: the
+    autotuner widens block_n to cut x-block reloads."""
+    bm, bn, bk = choose_blocks(8, 4096, 4096)
+    assert bn >= 256
+
+
+# --------------------------------------------------------------------------
+# benchmark JSON schema (benchmarks/run.py --json)
+# --------------------------------------------------------------------------
+
+def _load_bench_run():
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "run.py")
+    spec = importlib.util.spec_from_file_location("bench_run", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_json_schema(tmp_path):
+    run = _load_bench_run()
+    rows = [run.parse_row("serving/decode_fused,109,tok_s=9158;p50_us=109"),
+            run.parse_row("kernels/_total,123,done")]
+    assert rows[0] == {"suite": "serving", "name": "serving/decode_fused",
+                       "us_per_call": 109.0,
+                       "derived": "tok_s=9158;p50_us=109"}
+    out = tmp_path / "BENCH_test.json"
+    run.write_json(rows, str(out))
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == "sosa-bench-v1"
+    assert doc["rows"][1]["suite"] == "kernels"
+    assert {"suite", "name", "us_per_call", "derived"} <= set(
+        doc["rows"][0])
