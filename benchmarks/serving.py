@@ -12,8 +12,14 @@ Three phases, each reported as `serving/...` rows:
     is ~2x noisy): one warm pass compiles every chunk variant, then the
     best of two measured passes is reported. The fused multi-token loop's
     tokens/s over the reference's is the >=2x acceptance gate.
+  * families — the decode-gap rows: an MoE arch (exact-length prefill,
+    grouped-dispatch decode) and an SSM arch (now on the pow2 bucket
+    path via masked state updates) through the same mixed workload,
+    reporting tokens/s + prefill compile counts against the bounded-
+    bucket guarantee.
   * autotune — the DSE block geometry choose_blocks picks for the
-    full-scale fused decode GEMM shapes (pure model, no timing).
+    full-scale fused decode GEMM shapes (pure model, no timing), incl.
+    the transposed-weight LM-head and grouped MoE expert shapes.
 """
 
 from __future__ import annotations
@@ -144,20 +150,79 @@ def _decode_phase(lines):
     return lines
 
 
+def _family_phase(lines):
+    """MoE + SSM serving rows: the decode-gap families on the hot loop.
+
+    dbrx (moe): exact-length prefill (capacity displacement keeps it off
+    the bucket path — compile count equals #distinct lengths, the cost
+    the bucketed gate exists to expose). Decode runs the sort (scatter)
+    dispatch — the same capacity-bucketed assignment the grouped pod
+    GEMM consumes under use_pallas — because interpret-mode Pallas is
+    not timeable on CPU; the grouped-kernel hot path itself is gated by
+    tests (parity matrix + grouped-gemm trace counts), not timed here.
+    mamba2 (ssm): bucketed prefill via masked state updates — compile
+    count must sit under the <= log2(max_len) bound.
+    Timing is warm + min-of-2 on the jnp backend."""
+    import dataclasses
+    from repro.serve.engine import ServeEngine
+    lengths = list(range(5, 53, 4))                  # 12 distinct lengths
+    max_new = 9
+    for arch, tag in (("dbrx-132b", "moe"), ("mamba2-370m", "ssm")):
+        cfg, model, params = _mk_engine_parts(arch)
+        if cfg.moe is not None:
+            from repro.models.model import Model
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, dispatch="sort"))
+            model = Model(cfg)      # params are schema-identical across
+            #                         dispatch modes — reuse them
+        eng = ServeEngine(model, params, slots=4, max_len=64)
+
+        def run(seed):
+            reqs = _reset_requests(cfg, lengths, np.random.default_rng(seed),
+                                   max_new)
+            for r in reqs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            eng.run_to_completion(max_steps=500)
+            assert all(r.done for r in reqs)
+            return time.perf_counter() - t0
+
+        run(0)                                       # warm (compile)
+        dt = min(run(1), run(2))
+        toks = len(lengths) * max_new
+        lines.append(
+            f"serving/{tag}_mixed_{len(lengths)}lens,"
+            f"{dt / toks * 1e6:.0f},"
+            f"tok_s={toks / dt:.0f};bucketed={int(eng.bucketed)};"
+            f"prefill_compiles={eng.prefill_compiles};"
+            f"bucket_bound={eng.max_prefill_compiles}")
+    return lines
+
+
 def _autotune_phase(lines):
     """DSE-chosen pod geometry for full-scale serving GEMM shapes."""
     from repro.configs import get_arch
-    from repro.parallel.autoshard import choose_blocks
+    from repro.parallel.autoshard import choose_blocks, choose_blocks_grouped
     cfg = get_arch("granite-8b")
     shapes = {
         "decode_qkv": (64, cfg.d_model, cfg.d_model),   # 64 fused lanes
         "decode_ffn": (64, cfg.d_model, cfg.d_ff),
         "prefill_ffn": (4096, cfg.d_model, cfg.d_ff),
+        # transposed-weight LM head: 64 fused lanes against the stored
+        # [vocab, d] table (layout-invariant cost model)
+        "decode_lm_head": (64, cfg.d_model, cfg.vocab),
     }
     for name, (m, k, n) in shapes.items():
         bm, bn, bk = choose_blocks(m, k, n)
         lines.append(f"serving/autotune_{name},0,"
                      f"m={m};k={k};n={n};blocks={bm}x{bn}x{bk}")
+    moe = get_arch("dbrx-132b")
+    cap = 128                                        # per-expert bucket rows
+    bm, bn, bk = choose_blocks_grouped(
+        moe.moe.num_experts, cap, moe.d_model, moe.moe.d_ff_expert)
+    lines.append(f"serving/autotune_moe_expert_ffn,0,"
+                 f"g={moe.moe.num_experts};m={cap};k={moe.d_model};"
+                 f"n={moe.moe.d_ff_expert};blocks={bm}x{bn}x{bk}")
     return lines
 
 
@@ -165,5 +230,6 @@ def bench() -> list[str]:
     lines: list[str] = []
     _prefill_phase(lines)
     _decode_phase(lines)
+    _family_phase(lines)
     _autotune_phase(lines)
     return lines

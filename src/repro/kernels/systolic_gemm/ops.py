@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .systolic_gemm import grouped_systolic_gemm_pallas, systolic_gemm_pallas
+from .systolic_gemm import (grouped_systolic_gemm_pallas,
+                            systolic_gemm_nt_pallas, systolic_gemm_pallas)
 
 
 def _on_tpu() -> bool:
@@ -47,6 +48,17 @@ def _auto_blocks(m: int, k: int, n: int, dtype, out_dtype
     return choose_blocks(m, k, n,
                          dtype_bytes=jnp.dtype(dtype).itemsize,
                          out_bytes=jnp.dtype(out_dtype).itemsize)
+
+
+def _auto_blocks_grouped(g: int, m: int, k: int, n: int, dtype, out_dtype
+                         ) -> tuple[int, int, int]:
+    """Grouped-kernel geometry: the per-group problem is what the grid
+    tiles, so the autotuner scores (m, k, n) with the group count only
+    affecting the (uniform) traffic scale (see choose_blocks_grouped)."""
+    from ...parallel.autoshard import choose_blocks_grouped
+    return choose_blocks_grouped(g, m, k, n,
+                                 dtype_bytes=jnp.dtype(dtype).itemsize,
+                                 out_bytes=jnp.dtype(out_dtype).itemsize)
 
 
 @functools.partial(
@@ -114,6 +126,63 @@ def fused_lane_gemm(x, w, scale=None, bias=None, *, activation=None,
     jax.jit,
     static_argnames=("activation", "block_m", "block_n", "block_k",
                      "out_dtype", "interpret"))
+def systolic_gemm_t(x, w, scale=None, bias=None, *, activation=None,
+                    block_m: int | None = None, block_n: int | None = None,
+                    block_k: int | None = None,
+                    out_dtype=jnp.float32, interpret: bool | None = None):
+    """out = epilogue((x @ w.T) * scale + bias). x [M,K], w [N,K].
+
+    The transposed-weight pod GEMM: w streams in its stored layout (no
+    [K,N] transpose copy) — the tied-embedding unembed runs the [vocab, d]
+    token table as the LM head directly. Same autotune/padding contract as
+    `systolic_gemm` (the cost model is layout-invariant)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    M, K = x.shape
+    N = w.shape[0]
+    if block_m is None or block_n is None or block_k is None:
+        am, an, ak = _auto_blocks(M, K, N, x.dtype, out_dtype)
+        block_m, block_n, block_k = (block_m or am, block_n or an,
+                                     block_k or ak)
+    bm, bn, bk = (min(block_m, _rup(M)), min(block_n, _rup(N)),
+                  min(block_k, _rup(K)))
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bn, 0), bk, 1)
+    if scale is None:
+        scale = jnp.ones((N,), jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    sp = _pad_to(scale, bn, 0)
+    bp = _pad_to(bias, bn, 0)
+    out = systolic_gemm_nt_pallas(
+        xp, wp, sp, bp, block_m=bm, block_n=bn, block_k=bk,
+        activation=activation, out_dtype=out_dtype, interpret=interpret)
+    return out[:M, :N]
+
+
+def fused_lane_gemm_t(x, w, scale=None, bias=None, *, activation=None,
+                      out_dtype=None, interpret: bool | None = None,
+                      block_m: int | None = None, block_n: int | None = None,
+                      block_k: int | None = None):
+    """Fused-lane transposed GEMM: x [..., K] @ w [N, K]^T -> [..., N].
+    The LM-head entry point: all decode lanes / sequence positions fuse
+    into the M axis of ONE pod GEMM against the stored [vocab, d] table."""
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    out_dtype = jnp.float32 if out_dtype is None else out_dtype
+    out = systolic_gemm_t(
+        x.reshape(m, x.shape[-1]), w, scale, bias, activation=activation,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret)
+    return out.reshape(lead + (w.shape[0],))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
 def grouped_gemm(x, w, scale=None, bias=None, *, activation=None,
                  block_m: int | None = None, block_n: int | None = None,
                  block_k: int | None = None,
@@ -127,7 +196,7 @@ def grouped_gemm(x, w, scale=None, bias=None, *, activation=None,
     G, M, K = x.shape
     N = w.shape[2]
     if block_m is None or block_n is None or block_k is None:
-        am, an, ak = _auto_blocks(M, K, N, x.dtype, out_dtype)
+        am, an, ak = _auto_blocks_grouped(G, M, K, N, x.dtype, out_dtype)
         block_m, block_n, block_k = (block_m or am, block_n or an,
                                      block_k or ak)
     bm, bn, bk = (min(block_m, _rup(M)), min(block_n, _rup(N)),

@@ -29,3 +29,10 @@ def systolic_gemm_ref(x, w, scale=None, bias=None, *, activation=None,
     elif activation == "relu2":
         acc = jnp.square(jnp.maximum(acc, 0.0))
     return acc.astype(out_dtype)
+
+
+def systolic_gemm_t_ref(x, w, scale=None, bias=None, *, activation=None,
+                        out_dtype=jnp.float32):
+    """Oracle for the transposed-weight variant: x [M,K] @ w [N,K]^T."""
+    return systolic_gemm_ref(x, w.T, scale, bias, activation=activation,
+                             out_dtype=out_dtype)

@@ -45,6 +45,14 @@ The grouped variant (`grouped_systolic_gemm_pallas`) adds a leading
 group axis to the grid — G independent (M x K) @ (K x N) problems in one
 kernel launch (MoE experts, multi-tenant fused lanes); block geometry and
 the psum-chain walk are per-group identical.
+
+The transposed-weight variant (`systolic_gemm_nt_pallas`) contracts
+x [M, K] against w stored as [N, K] — out = x @ w.T — streaming w blocks
+in their stored layout. This is the tied-embedding unembed shape: the
+[vocab, d] token-embedding table serves as the LM head without ever
+materializing a [d, vocab] transpose copy in HBM (at nemotron scale that
+copy alone is 9.4 GB). The cost model is layout-invariant (same block
+bytes, same grid walk), so `choose_blocks` scores it identically.
 """
 
 from __future__ import annotations
@@ -66,6 +74,14 @@ def _accumulate(x, w, acc_ref):
         acc_ref[...] += jax.lax.dot_general(
             x, w, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+
+
+def _accumulate_nt(x, w, acc_ref):
+    """acc += x [bm, bk] @ w[bn, bk]^T — contraction on the shared K axis,
+    w consumed in its stored (transposed) layout."""
+    pref = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=pref)
 
 
 def _epilogue_math(acc, scale, bias, activation):
@@ -209,3 +225,67 @@ def grouped_systolic_gemm_pallas(
         ],
         interpret=interpret,
     )(x, w, scale.reshape(G, 1, N), bias.reshape(G, 1, N))
+
+
+def _gemm_nt_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+                    n_k: int, activation: str | None, out_dtype):
+    """One (i, j, k) grid step of the transposed-weight walk:
+    acc += x_blk @ w_blk^T; epilogue at k == last."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate_nt(x_ref[...], w_ref[...], acc_ref)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = _epilogue_math(
+            acc_ref[...], scale_ref[...], bias_ref[...],
+            activation).astype(out_dtype)
+
+
+def systolic_gemm_nt_pallas(
+    x: jax.Array,                  # [M, K] int8 | bf16
+    w: jax.Array,                  # [N, K] — stored transposed (tied embed)
+    scale: jax.Array,              # [N] f32 dequant scale (ones if None)
+    bias: jax.Array,               # [N] f32
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 256,
+    activation: str | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """out = epilogue((x @ w.T) * scale + bias) with w in [N, K] layout.
+    Same K-minor psum-chain grid as `systolic_gemm_pallas`; only the w
+    BlockSpec walks (j, k) instead of (k, j)."""
+    M, K = x.shape
+    N, K2 = w.shape
+    assert K == K2
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        "caller (ops.py) pads to block multiples")
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+
+    kernel = functools.partial(
+        _gemm_nt_kernel, n_k=n_k, activation=activation, out_dtype=out_dtype)
+    acc_dtype = jnp.int32 if x.dtype == jnp.int8 else jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), acc_dtype),
+        ],
+        interpret=interpret,
+    )(x, w, scale.reshape(1, N), bias.reshape(1, N))

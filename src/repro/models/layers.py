@@ -191,7 +191,18 @@ def embed(p: dict, tokens):
     return jnp.take(p["tok"], tokens, axis=0)
 
 
-def unembed(p: dict, x):
+def unembed(p: dict, x, use_pallas: bool = False):
+    """Hidden states -> logits: the largest single GEMM of the decode step.
+    use_pallas routes it through the pod kernel — untied [d, vocab] weights
+    on the fused-lane GEMM, tied embeddings on the transposed-weight
+    variant, which streams the stored [vocab, d] token table directly (no
+    transpose copy of the embedding in HBM)."""
+    if use_pallas:
+        from ..kernels.systolic_gemm.ops import (fused_lane_gemm,
+                                                 fused_lane_gemm_t)
+        if "unembed" in p:
+            return fused_lane_gemm(x, p["unembed"], out_dtype=x.dtype)
+        return fused_lane_gemm_t(x, p["tok"], out_dtype=x.dtype)
     if "unembed" in p:
         return jnp.einsum("...d,dv->...v", x, p["unembed"])
     return jnp.einsum("...d,vd->...v", x, p["tok"])

@@ -185,12 +185,12 @@ class Model:
         return None
 
     def _run_segment(self, seg: Segment, p_seg, x, positions, cache_seg,
-                     cross_src):
+                     cross_src, true_lens=None):
         cfg = self.cfg
         kw = dict(positions=positions, impl=self.impl, ssd_impl=self.ssd_impl,
                   kv_rep=self.kv_rep, window=seg.window,
                   kv_block=self.kv_block, constrain=self.constrain,
-                  use_pallas=self.use_pallas)
+                  use_pallas=self.use_pallas, true_lens=true_lens)
 
         if seg.kind == "vlm":
             return self._run_vlm_segment(seg, p_seg, x, cache_seg,
@@ -300,8 +300,13 @@ class Model:
         return x, new_cache
 
     def forward(self, params, batch, cache: dict | None = None,
-                positions=None):
-        """Returns (logits, new_cache). cache None -> train/eval forward."""
+                positions=None, true_lens=None):
+        """Returns (logits, new_cache). cache None -> train/eval forward.
+        true_lens [B]: per-lane valid lengths of a right-padded (bucketed)
+        prefill — stateful mixers (SSM conv/SSD state, ring KV) apply
+        masked state updates so the padding is inert (see apply_ssm /
+        apply_gqa); attention-only KV caches ignore it (causal masking +
+        the engine's post-prefill length fixup already handle padding)."""
         cfg = self.cfg
         S = batch["tokens"].shape[1]
         if positions is None:
@@ -315,11 +320,12 @@ class Model:
         for seg in self.segs:
             cseg = cache.get(seg.name) if cache is not None else None
             x, nc = self._run_segment(seg, params[seg.name], x, positions,
-                                      cseg, cross_src)
+                                      cseg, cross_src,
+                                      true_lens=true_lens)
             if cache is not None:
                 new_cache[seg.name] = nc
         x = apply_norm(params["ln_f"], x, cfg.norm)
-        logits = unembed(params["embed"], x)
+        logits = unembed(params["embed"], x, use_pallas=self.use_pallas)
         logits = self.constrain(logits, "logits")
         return logits, (new_cache if cache is not None else None)
 
@@ -334,12 +340,16 @@ class Model:
         """True when prefill lanes can be right-padded to a bucket length
         without corrupting serving state: attention-only KV/MLA caches are
         inert under padding (causal masking + the engine's post-prefill
-        length fixup). SSM and ring (sliding-window) caches integrate the
-        padded positions into recurrent/rolled state, MoE capacity lets
-        padding tokens displace real ones, and encoder-decoder / VLM
-        prompts carry non-token modalities — all must prefill exact-length.
+        length fixup), and SSM / ring (sliding-window) caches now take
+        masked state updates driven by the engine's per-lane `true_lens`
+        (dt-masked SSD recurrence + true-length conv window, per-lane ring
+        slot gather — see apply_ssm / apply_gqa), so ssm and hybrid join
+        the bucket path. MoE capacity still lets padding tokens displace
+        real ones, and encoder-decoder / VLM prompts carry non-token
+        modalities — those families prefill exact-length.
         """
-        return self.cfg.family == "dense" and not self.cfg.encoder_decoder
+        return (self.cfg.family in ("dense", "ssm", "hybrid")
+                and not self.cfg.encoder_decoder)
 
     def init_cache(self, batch: int, max_len: int, src_len: int = 0,
                    dtype=jnp.bfloat16) -> dict:

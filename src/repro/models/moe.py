@@ -5,6 +5,12 @@ placed on the `model` mesh axis (see parallel/sharding.py).
 
 Supports DeepSeek-V2 (160 routed top-6 + 2 shared experts, first layer
 dense) and DBRX (16 routed top-4).
+
+Serving hot path (`apply_moe(..., use_pallas=True)`): capacity-bucketed
+scatter dispatch + the grouped systolic pod GEMM — every expert is one
+group of a single kernel launch, so the decode step's expert FFNs run as
+the E-pod co-schedule the SOSA multi-tenancy analysis assumes instead of
+a fan of einsums. The einsum paths stay the numerics oracle.
 """
 
 from __future__ import annotations
@@ -13,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, MoEConfig
-from .layers import ParamSpec, activation_fn
+from .layers import ParamSpec, activation_fn, pod_dense
 
 
 def moe_schema(cfg: ArchConfig, layers: int | None = None) -> dict:
@@ -49,10 +55,12 @@ def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
     return max(1, min(tokens_per_group, cap))
 
 
-def _route(p, xt, m: MoEConfig):
+def _route(p, xt, m: MoEConfig, use_sort: bool | None = None):
     """Shared router: (gate_vals, expert_idx, pos, keep) per [G, n, K].
     Priority order for capacity is flat (token-major) order in the group —
-    identical between the onehot and sort dispatch paths.
+    identical between the onehot and sort dispatch paths. `use_sort`
+    overrides the config's position computation (the pallas hot path must
+    never build the one-hot cumsum, whatever m.dispatch says).
 
     Position computation:
       onehot — cumsum over a [G, n·K, E] one-hot: O(N·K·E) int traffic.
@@ -73,7 +81,9 @@ def _route(p, xt, m: MoEConfig):
         gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
     cap = _capacity(n, m)
 
-    if m.dispatch in ("sort", "hybrid"):
+    if use_sort is None:
+        use_sort = m.dispatch in ("sort", "hybrid")
+    if use_sort:
         nK = n * m.top_k
         flat_e = expert_idx.reshape(G, nK)
         order = jnp.argsort(flat_e, axis=1, stable=True)      # [G, nK]
@@ -110,7 +120,34 @@ def _experts(p, xe, act, constrain=None):
     return ye
 
 
-def apply_moe(p: dict, x, cfg: ArchConfig, constrain=None):
+def _experts_grouped(p, xe, activation: str, constrain=None):
+    """xe [G,E,C,D] -> ye [G,E,C,D] on the grouped pod GEMM.
+
+    Experts are the kernel's group axis and each expert's G*C capacity
+    rows fuse into its M axis: E independent (G·C x D x F) GEMMs execute
+    as ONE kernel launch per projection
+    (kernels/systolic_gemm.grouped_systolic_gemm_pallas), with the gate
+    activation running in the per-group fused epilogue — the paper's SIMD
+    post-processor, one per expert pod."""
+    G, E, C, D = xe.shape
+    if constrain is not None:
+        xe = constrain(xe, "moe_dispatched")
+    from ..kernels.systolic_gemm.ops import grouped_gemm
+    # the kernel contracts like-typed operands (einsum would promote)
+    dt = jnp.promote_types(xe.dtype, p["up"].dtype)
+    xg = xe.transpose(1, 0, 2, 3).reshape(E, G * C, D).astype(dt)
+    h = grouped_gemm(xg, p["up"].astype(dt), out_dtype=dt)
+    g = grouped_gemm(xg, p["gate"].astype(dt), activation=activation,
+                     out_dtype=dt)
+    ye = grouped_gemm(h * g, p["down"].astype(dt), out_dtype=dt)
+    ye = ye.reshape(E, G, C, D).transpose(1, 0, 2, 3)
+    if constrain is not None:
+        ye = constrain(ye, "moe_dispatched")
+    return ye
+
+
+def apply_moe(p: dict, x, cfg: ArchConfig, constrain=None,
+              use_pallas: bool = False):
     """x: [B, S, D] -> [B, S, D].
 
     GShard-style *grouped* top-k routing: tokens are cut into groups of
@@ -123,6 +160,13 @@ def apply_moe(p: dict, x, cfg: ArchConfig, constrain=None):
       onehot — einsum with [G,n,E,cap] one-hots (reference, GShard)
       sort   — argsort + scatter/gather: O(N·K·D) data movement instead of
                O(N·E·cap·D); the §Perf winner for many-expert models.
+
+    use_pallas forces the sort-style scatter dispatch (capacity-bucketed
+    per-expert groups, no one-hot einsums on the hot path) and runs the
+    expert FFNs + shared experts on the systolic pod GEMM kernels
+    (`_experts_grouped` / layers.pod_dense); the einsum paths above stay
+    the numerics oracle. The router logits stay a [·, d]x[d, E] einsum —
+    routing, not dispatch, and E columns round below one MXU lane tile.
     """
     m = cfg.moe
     act = activation_fn(cfg.activation)
@@ -130,11 +174,14 @@ def apply_moe(p: dict, x, cfg: ArchConfig, constrain=None):
     N = B * S
     G, n = _group_shape(N, m.group_size)
     xt = x.reshape(G, n, D)
-    gate_vals, expert_idx, pos, keep, cap = _route(p, xt, m)
+    gate_vals, expert_idx, pos, keep, cap = _route(
+        p, xt, m,
+        use_sort=True if use_pallas else None)
 
-    if m.dispatch == "sort":
+    if use_pallas or m.dispatch == "sort":
         out = _dispatch_sort(p, xt, gate_vals, expert_idx, pos, keep, cap,
-                             m, act)
+                             cfg, act, use_pallas=use_pallas,
+                             constrain=constrain)
     else:
         # "onehot" and "hybrid" (argsort positions + einsum dispatch):
         expert_oh = jax.nn.one_hot(expert_idx, m.num_experts, dtype=x.dtype)
@@ -148,15 +195,23 @@ def apply_moe(p: dict, x, cfg: ArchConfig, constrain=None):
         out = jnp.einsum("gnec,gecd->gnd", combine, ye)
 
     if m.num_shared_experts:
-        h = jnp.einsum("gnd,df->gnf", xt, p["shared_up"])
-        g = act(jnp.einsum("gnd,df->gnf", xt, p["shared_gate"]))
-        out = out + jnp.einsum("gnf,fd->gnd", h * g, p["shared_down"])
+        if use_pallas:
+            h = pod_dense(xt, p["shared_up"])
+            g = pod_dense(xt, p["shared_gate"], activation=cfg.activation)
+            out = out + pod_dense(h * g, p["shared_down"])
+        else:
+            h = jnp.einsum("gnd,df->gnf", xt, p["shared_up"])
+            g = act(jnp.einsum("gnd,df->gnf", xt, p["shared_gate"]))
+            out = out + jnp.einsum("gnf,fd->gnd", h * g, p["shared_down"])
     return out.reshape(B, S, D).astype(x.dtype)
 
 
-def _dispatch_sort(p, xt, gate_vals, expert_idx, pos, keep, cap, m, act):
+def _dispatch_sort(p, xt, gate_vals, expert_idx, pos, keep, cap, cfg, act,
+                   use_pallas: bool = False, constrain=None):
     """argsort/scatter dispatch: same (expert, slot) assignment as the
-    one-hot path, but built by indexing instead of dense one-hot einsums."""
+    one-hot path, but built by indexing instead of dense one-hot einsums.
+    With use_pallas the capacity buckets run on the grouped pod GEMM."""
+    m = cfg.moe
     G, n, D = xt.shape
     K = m.top_k
     E = m.num_experts
@@ -173,7 +228,10 @@ def _dispatch_sort(p, xt, gate_vals, expert_idx, pos, keep, cap, m, act):
     buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, gathered)
     xe = buf[:, :E * cap].reshape(G, E, cap, D)
 
-    ye = _experts(p, xe, act)
+    if use_pallas:
+        ye = _experts_grouped(p, xe, cfg.activation, constrain)
+    else:
+        ye = _experts(p, xe, act, constrain)
 
     ye_flat = ye.reshape(G, E * cap, D)
     back = jnp.take_along_axis(

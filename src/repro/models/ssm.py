@@ -54,9 +54,13 @@ def _split_proj(zxbcdt, cfg: ArchConfig):
     return z, x, B, C, dt
 
 
-def _causal_conv(x, w, b, cache=None):
+def _causal_conv(x, w, b, cache=None, true_lens=None):
     """Depthwise causal conv1d. x [B,S,Cd], w [K,Cd].
-    cache: [B, K-1, Cd] trailing context for decode; returns (y, new_cache)."""
+    cache: [B, K-1, Cd] trailing context for decode; returns (y, new_cache).
+    true_lens [B]: per-lane valid length of a right-padded prefill — the
+    returned context window then ends at each lane's *true* last token
+    (ctx index L maps to input position L-(K-1)), bit-identical to what an
+    exact-length prefill of that lane would have cached."""
     K = w.shape[0]
     if cache is None:
         ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
@@ -65,7 +69,14 @@ def _causal_conv(x, w, b, cache=None):
     # y[t] = sum_k w[k] * ctx[t + k]
     S = x.shape[1]
     y = sum(ctx[:, k:k + S, :] * w[k] for k in range(K)) + b
-    new_cache = ctx[:, -(K - 1):, :] if K > 1 else ctx[:, :0, :]
+    if K == 1:
+        new_cache = ctx[:, :0, :]
+    elif true_lens is not None:
+        new_cache = jax.vmap(
+            lambda c, l: jax.lax.dynamic_slice_in_dim(c, l, K - 1, axis=0)
+        )(ctx, true_lens)
+    else:
+        new_cache = ctx[:, -(K - 1):, :]
     return y, new_cache
 
 
@@ -178,11 +189,20 @@ jax.tree_util.register_dataclass(
 
 
 def apply_ssm(p: dict, u, cfg: ArchConfig, cache: SSMCache | None = None,
-              impl: str = "jnp"):
+              impl: str = "jnp", true_lens=None):
     """Full Mamba-2 mixer. u [B,S,D] -> ([B,S,D], new_cache_or_None).
 
     Prefill/train: chunked SSD (cache may be None). When S == 1 and a cache
     is provided, takes the O(1) recurrent path.
+
+    true_lens [B] (bucketed prefill): the input is right-padded to a shared
+    bucket length and the recurrence must not integrate the padding. The
+    masked state update is dt <- dt * (pos < L): a padded step then has
+    exp(dt·A) = 1 and dt·B·x = 0 — an exact identity on the SSD state —
+    and contributes exactly zero to every real position's intra-chunk
+    output, so real-lane outputs and the final state are bit-identical to
+    an exact-length prefill. The conv context window is gathered at the
+    true length (`_causal_conv`).
     """
     s = cfg.ssm
     di = s.d_inner(cfg.d_model)
@@ -194,11 +214,17 @@ def apply_ssm(p: dict, u, cfg: ArchConfig, cache: SSMCache | None = None,
     z, x, B, C, dt = _split_proj(zxbcdt, cfg)
     xBC = jnp.concatenate([x, B, C], axis=-1)
     conv_cache = cache.conv if cache is not None else None
-    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_cache)
+    if true_lens is not None and u.shape[1] == 1:
+        true_lens = None                        # decode: nothing is padded
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_cache,
+                                 true_lens=true_lens)
     xBC = jax.nn.silu(xBC)
     x, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if true_lens is not None:
+        valid = jnp.arange(u.shape[1])[None, :] < true_lens[:, None]
+        dt = dt * valid[..., None]              # exact 0 at padded steps
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     bsz, S = u.shape[0], u.shape[1]
     xh = x.reshape(bsz, S, H, P)

@@ -116,12 +116,15 @@ def attn_schema(cfg: ArchConfig, layers: int | None) -> dict:
 def apply_gqa(p, x, cfg: ArchConfig, *, positions, causal=True, window=None,
               impl="chunked", cache: KVCache | RingKVCache | None = None,
               kv_rep: int = 1, kv_x=None, kv_block: int = 1024,
-              use_pallas: bool = False):
+              use_pallas: bool = False, true_lens=None):
     """GQA attention. Train/prefill when cache is None or being filled;
     decode when x has S == 1 and cache is not None.
     kv_x: optional separate KV source (cross-attention).
     use_pallas routes the q/k/v/o projections through the systolic pod
-    GEMM (layers.pod_dense, fused-lane form)."""
+    GEMM (layers.pod_dense, fused-lane form).
+    true_lens [B]: per-lane valid length of a right-padded (bucketed)
+    prefill — ring caches then gather each lane's last-window *real*
+    tokens into their ring slots instead of the padded tail."""
     src = kv_x if kv_x is not None else x
     if use_pallas:
         q = pod_dense(x, p["q"])
@@ -156,23 +159,45 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions, causal=True, window=None,
     else:                                                # train / prefill
         if cache is not None:
             if isinstance(cache, RingKVCache):
-                # prefill a ring cache: keep last `window` tokens
                 W = cache.window
-                kw = k[:, -W:]
-                vw = v[:, -W:]
-                pad = W - kw.shape[1]
-                if pad > 0:
-                    kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                    vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
-                # ring layout: token p lives at slot p % W. If S < W the
-                # suffix already sits at its slots; otherwise rotate so the
-                # first kept token (p = S-W) lands on slot (S-W) % W.
                 S = k.shape[1]
-                roll = (S % W) if S >= W else 0
-                kw = jnp.roll(kw, roll, axis=1)
-                vw = jnp.roll(vw, roll, axis=1)
-                new_cache = RingKVCache(
-                    kw, vw, jnp.full((k.shape[0],), S, jnp.int32))
+                if true_lens is not None:
+                    # bucketed prefill: per-lane gather of the last-window
+                    # real tokens into ring layout (token p -> slot p % W).
+                    # Slot s holds p(s) = last - ((last - s) mod W), the
+                    # newest real position congruent to s; slots older than
+                    # the window (or before position 0) stay zero and are
+                    # masked by positions() via the true length.
+                    last = (true_lens - 1)[:, None]            # [B, 1]
+                    slots = jnp.arange(W)[None, :]             # [1, W]
+                    pos = last - ((last - slots) % W)          # [B, W]
+                    valid = (pos >= 0) & (pos > last - W)
+                    idx = jnp.clip(pos, 0, S - 1)[..., None, None]
+                    take = lambda a: jnp.where(
+                        valid[..., None, None],
+                        jnp.take_along_axis(
+                            a, jnp.broadcast_to(
+                                idx, (a.shape[0], W) + a.shape[2:]), axis=1),
+                        0)
+                    new_cache = RingKVCache(take(k), take(v),
+                                            true_lens.astype(jnp.int32))
+                else:
+                    # exact-length prefill: keep last `window` tokens
+                    kw = k[:, -W:]
+                    vw = v[:, -W:]
+                    pad = W - kw.shape[1]
+                    if pad > 0:
+                        kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    # ring layout: token p lives at slot p % W. If S < W
+                    # the suffix already sits at its slots; otherwise
+                    # rotate so the first kept token (p = S-W) lands on
+                    # slot (S-W) % W.
+                    roll = (S % W) if S >= W else 0
+                    kw = jnp.roll(kw, roll, axis=1)
+                    vw = jnp.roll(vw, roll, axis=1)
+                    new_cache = RingKVCache(
+                        kw, vw, jnp.full((k.shape[0],), S, jnp.int32))
             else:
                 new_cache = cache.append(k, v)
         out = chunked_attention(q, k, v, causal=causal, window=window,
@@ -320,14 +345,15 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
                 positions, window=None, impl="chunked", ssd_impl="jnp",
                 cache: dict | None = None, kv_rep: int = 1,
                 cross_src=None, causal=True, kv_block: int = 1024,
-                constrain=None, use_pallas: bool = False):
+                constrain=None, use_pallas: bool = False, true_lens=None):
     """One layer. cache: dict with keys subset of {attn, ssm, cross} or None.
     cross_src: source embeddings for cross-attention (encoder output /
     image embeddings); at decode the per-layer cross K/V come from the
     cache instead. Returns (x, new_cache_dict).
-    use_pallas: dense/GQA projections + MLP run on the systolic pod GEMM
-    (MLA, MoE dispatch, SSM and the cross-attention q/o stay on the
-    reference einsum path)."""
+    use_pallas: dense/GQA projections, MLPs and the MoE expert dispatch
+    (capacity-bucketed grouped pod GEMM, models/moe.py) run on the
+    systolic pod kernels (MLA, SSM and the cross-attention q/o stay on
+    the reference einsum path)."""
     new_cache: dict = {}
 
     def _cross_kv():
@@ -346,7 +372,7 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
         h = apply_norm(p["ln_ssm"], x, cfg.norm)
         y, sc = apply_ssm(p["ssm"], h, cfg,
                           cache=cache.get("ssm") if cache else None,
-                          impl=ssd_impl)
+                          impl=ssd_impl, true_lens=true_lens)
         if sc is not None:
             new_cache["ssm"] = sc
         return x + y, new_cache
@@ -369,10 +395,11 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
         a, ac = apply_gqa(p["attn"], h, cfg, positions=positions,
                           causal=causal, window=window, impl=impl,
                           cache=cache.get("attn") if cache else None,
-                          kv_rep=kv_rep, use_pallas=use_pallas)
+                          kv_rep=kv_rep, use_pallas=use_pallas,
+                          true_lens=true_lens)
         s, sc = apply_ssm(p["ssm"], apply_norm(p["ln_ssm"], x, cfg.norm),
                           cfg, cache=cache.get("ssm") if cache else None,
-                          impl=ssd_impl)
+                          impl=ssd_impl, true_lens=true_lens)
         if ac is not None:
             new_cache["attn"] = ac
         if sc is not None:
@@ -393,7 +420,7 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
                           causal=causal, window=window, impl=impl,
                           cache=cache.get("attn") if cache else None,
                           kv_rep=kv_rep, kv_block=kv_block,
-                          use_pallas=use_pallas)
+                          use_pallas=use_pallas, true_lens=true_lens)
     if ac is not None:
         new_cache["attn"] = ac
     x = x + a
@@ -410,7 +437,8 @@ def apply_block(p, x, cfg: ArchConfig, kind: str, *,
 
     h = apply_norm(p["ln_mlp"], x, cfg.norm)
     if kind == "moe":
-        y = apply_moe(p["moe"], h, cfg, constrain=constrain)
+        y = apply_moe(p["moe"], h, cfg, constrain=constrain,
+                      use_pallas=use_pallas)
     else:
         y = apply_mlp(p["mlp"], h, cfg.activation, use_pallas=use_pallas)
     return x + y, new_cache

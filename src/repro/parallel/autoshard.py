@@ -196,6 +196,35 @@ def choose_blocks(m: int, k: int, n: int,
     return best
 
 
+@functools.lru_cache(maxsize=4096)
+def choose_blocks_grouped(g: int, m: int, k: int, n: int,
+                          candidates=(128, 256, 512),
+                          dtype_bytes: int = 2, out_bytes: int = 4,
+                          vmem_budget: int = _VMEM_BUDGET
+                          ) -> tuple[int, int, int]:
+    """Block geometry for the grouped pod GEMM: G independent (m x k x n)
+    problems in one launch (kernels.systolic_gemm.grouped_systolic_gemm_
+    pallas). The grid tiles the *per-group* problem and the VMEM working
+    set is one group's blocks, so the score is exactly `choose_blocks` of
+    (m, k, n): the group axis multiplies padded MACs and HBM traffic by G
+    uniformly and cannot shift the roofline argmin. Kept as its own cached
+    entry point so grouped shapes (MoE experts: small per-expert m = G_cap
+    rows) autotune independently of the dense shapes they share dims with.
+    """
+    assert g >= 1
+    return choose_blocks(m, k, n, candidates=candidates,
+                         dtype_bytes=dtype_bytes, out_bytes=out_bytes,
+                         vmem_budget=vmem_budget)
+
+
+# The transposed-weight kernel (systolic_gemm_nt_pallas: x [M,K] @ w[N,K]^T,
+# the tied-embedding LM head) reuses `choose_blocks(m, k, n)` unchanged:
+# its w block is [bn, bk] instead of [bk, bn] — identical bytes, identical
+# grid walk, identical psum-chain depth — so the roofline is layout-
+# invariant. ops.systolic_gemm_t calls choose_blocks with the logical
+# (M, K, N) of the product, exactly like the untransposed path.
+
+
 def plan_report(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict) -> str:
     plan, table = choose_plan(cfg, shape, mesh_shape)
     gemms = device_gemms(cfg, shape, plan)

@@ -12,9 +12,13 @@ preserved bit-for-bit in serve/reference.py as the oracle):
     one entry per distinct prompt length. Padding is inert for
     attention-only caches: causal masking keeps padded positions out of
     real positions' math, and a post-prefill length fixup masks the padded
-    cache slots until decode overwrites them. Models whose state integrates
-    padding (SSM, ring buffers, MoE capacity, encoder-decoder/VLM inputs)
-    fall back to exact-length prefill (see Model.bucketed_prefill_ok).
+    cache slots until decode overwrites them. Stateful mixers (SSM, ring
+    buffers) join the bucket path via masked state updates driven by the
+    per-lane true lengths (dt-masked SSD recurrence, true-length conv
+    window, per-lane ring slot gather — see Model.forward(true_lens=...)).
+    Models whose prefill genuinely can't share a padded batch (MoE
+    capacity displacement, encoder-decoder/VLM non-token inputs) fall
+    back to exact-length prefill (see Model.bucketed_prefill_ok).
 
   * **Fused multi-token decode** — a `lax.scan` of up to `decode_chunk`
     decode steps runs in one device call, carrying tokens / positions /
@@ -180,8 +184,12 @@ class ServeEngine:
         shape)."""
         lane_cache = self.model.init_cache(self.slots, self.max_len,
                                            src_len=self.src_len)
+        # true_lens drives the stateful families' masked state updates
+        # (SSM dt-masking + conv window, ring slot gather); attention-only
+        # caches ignore it and rely on the _fix_lengths fixup below
         logits, lane_cache = self.model.forward(params, {"tokens": tokens},
-                                                cache=lane_cache)
+                                                cache=lane_cache,
+                                                true_lens=true_lens)
         idx = jnp.maximum(true_lens - 1, 0)
         last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
         first_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)

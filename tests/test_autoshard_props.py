@@ -1,0 +1,84 @@
+"""Property tests for the tile_stats-driven Pallas block autotuner
+(parallel.autoshard.choose_blocks): randomized GemmSpecs — including the
+new transposed (tied-embedding LM head, vocab-scale N) and grouped (MoE
+per-expert capacity rows) shapes — must yield candidate blocks whose
+kernel-effective clipping divides the padded problem and whose VMEM
+working set respects the budget."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # degrade gracefully: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.parallel.autoshard import (_VMEM_BUDGET, _rup8, choose_blocks,
+                                      choose_blocks_grouped)
+
+CANDIDATES = (128, 256, 512)
+
+
+def _ops_effective(blocks, m, k, n):
+    """The kernel-effective geometry, exactly as ops.systolic_gemm clips
+    (min(block, sublane-rounded dim)) before padding to block multiples."""
+    bm, bn, bk = blocks
+    return min(bm, _rup8(m)), min(bn, _rup8(n)), min(bk, _rup8(k))
+
+
+def _check_contract(blocks, m, k, n, dtype_bytes, out_bytes):
+    assert all(b in CANDIDATES for b in blocks)
+    bm_e, bn_e, bk_e = _ops_effective(blocks, m, k, n)
+    # the padded problem ops.py builds is an exact multiple of the
+    # effective blocks (the kernel asserts this; here it's a property)
+    for dim, blk in ((m, bm_e), (k, bk_e), (n, bn_e)):
+        padded = -(-dim // blk) * blk
+        assert padded % blk == 0
+        assert padded - dim < blk          # never pads a full extra block
+    # VMEM working set: double-buffered streaming blocks + accumulator +
+    # output block (the same accounting choose_blocks scores with)
+    vmem = (2 * (bm_e * bk_e + bk_e * bn_e) * dtype_bytes
+            + bm_e * bn_e * (4 + out_bytes))
+    assert vmem <= _VMEM_BUDGET, (blocks, (m, k, n), vmem)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 8192), k=st.integers(1, 8192),
+       n=st.integers(1, 8192),
+       dtype_bytes=st.sampled_from([1, 2, 4]),
+       out_bytes=st.sampled_from([2, 4]))
+def test_choose_blocks_contract(m, k, n, dtype_bytes, out_bytes):
+    blocks = choose_blocks(m, k, n, dtype_bytes=dtype_bytes,
+                           out_bytes=out_bytes)
+    _check_contract(blocks, m, k, n, dtype_bytes, out_bytes)
+    # deterministic (and lru-cached) per shape
+    assert blocks == choose_blocks(m, k, n, dtype_bytes=dtype_bytes,
+                                   out_bytes=out_bytes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(lanes=st.integers(1, 256), d=st.sampled_from([512, 1024, 4096]),
+       vocab=st.integers(1000, 300000))
+def test_choose_blocks_transposed_lm_head_shapes(lanes, d, vocab):
+    """The unembed GEMM (fused decode lanes x d_model x vocab): the
+    transposed-weight kernel scores with the same layout-invariant model,
+    so the contract must hold at vocab-scale N (up to nemotron's 256k)."""
+    blocks = choose_blocks(lanes, d, vocab, dtype_bytes=2, out_bytes=2)
+    _check_contract(blocks, lanes, d, vocab, 2, 2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=st.integers(1, 160), cap=st.integers(1, 128),
+       d=st.sampled_from([64, 1024, 5120]),
+       f=st.sampled_from([32, 1536, 10752]))
+def test_choose_blocks_grouped_moe_shapes(g, cap, d, f):
+    """Grouped (MoE expert) shapes: G pods of (cap x d x f). The group
+    axis scales the roofline uniformly, so the grouped entry point must
+    agree with the per-group score and satisfy the same contract."""
+    blocks = choose_blocks_grouped(g, cap, d, f)
+    _check_contract(blocks, cap, d, f, 2, 4)
+    assert blocks == choose_blocks(cap, d, f)
+
+
+def test_choose_blocks_grouped_rejects_zero_groups():
+    with pytest.raises(AssertionError):
+        choose_blocks_grouped(0, 8, 64, 64)

@@ -15,9 +15,11 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.ssd.ops import ssd
 from repro.kernels.ssd.ref import ssd_ref
-from repro.kernels.systolic_gemm.ops import (fused_lane_gemm, grouped_gemm,
-                                             systolic_gemm)
-from repro.kernels.systolic_gemm.ref import systolic_gemm_ref
+from repro.kernels.systolic_gemm.ops import (fused_lane_gemm,
+                                             fused_lane_gemm_t, grouped_gemm,
+                                             systolic_gemm, systolic_gemm_t)
+from repro.kernels.systolic_gemm.ref import (systolic_gemm_ref,
+                                             systolic_gemm_t_ref)
 
 RNG = np.random.default_rng(42)
 
@@ -138,6 +140,124 @@ def test_fused_lane_gemm_collapses_leading_axes():
     ref = jnp.einsum("bsk,kn->bsn", x, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# grouped GEMM edge cases (the shapes MoE capacity-bucket dispatch hits)
+# --------------------------------------------------------------------------
+
+def test_grouped_gemm_empty_group_stays_zero():
+    """An expert that received no tokens is an all-zero group: its output
+    must be exactly zero (no epilogue bleed), neighbours unaffected."""
+    G, M, K, N = 3, 16, 32, 24
+    x = jnp.asarray(RNG.standard_normal((G, M, K)), jnp.float32)
+    x = x.at[1].set(0.0)                       # expert 1: empty bucket
+    w = jnp.asarray(RNG.standard_normal((G, K, N)), jnp.float32)
+    out = grouped_gemm(x, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    for g in (0, 2):
+        np.testing.assert_allclose(np.asarray(out[g]),
+                                   np.asarray(systolic_gemm_ref(x[g], w[g])),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_gemm_ragged_fill():
+    """Capacity buckets are ragged: each group has a different number of
+    real rows, the rest zero-padded. Real rows must match the per-group
+    oracle, padded rows stay exactly zero (rows are independent in a
+    GEMM — the invariant the MoE scatter dispatch relies on)."""
+    G, M, K, N = 4, 12, 20, 16
+    fills = [12, 5, 1, 0]
+    x = jnp.asarray(RNG.standard_normal((G, M, K)), jnp.float32)
+    mask = (np.arange(M)[None, :] < np.asarray(fills)[:, None])
+    x = x * jnp.asarray(mask[..., None], jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((G, K, N)), jnp.float32)
+    out = np.asarray(grouped_gemm(x, w, interpret=True))
+    ref = np.stack([np.asarray(systolic_gemm_ref(x[g], w[g]))
+                    for g in range(G)])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    for g, f in enumerate(fills):
+        np.testing.assert_array_equal(out[g, f:], 0.0)
+
+
+def test_grouped_gemm_single_group_degenerates_to_gemm():
+    """G == 1 (single-expert model) must equal the plain pod GEMM."""
+    M, K, N = 40, 56, 33
+    x = jnp.asarray(RNG.integers(-40, 40, (1, M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-40, 40, (1, K, N)), jnp.int8)
+    out = grouped_gemm(x, w, interpret=True)
+    ref = systolic_gemm(x[0], w[0], interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(ref),
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# transposed-weight GEMM (the tied-embedding LM head)
+# --------------------------------------------------------------------------
+
+GEMM_T_SHAPES = [(64, 64, 64), (100, 130, 70), (1, 16, 8), (33, 257, 129),
+                 (8, 64, 500)]
+
+
+@pytest.mark.parametrize("shape", GEMM_T_SHAPES)
+@pytest.mark.parametrize("dtype", ["int8", "bfloat16", "float32"])
+def test_systolic_gemm_t_shapes(shape, dtype):
+    """x [M,K] @ w[N,K]^T == oracle, across dtypes and ragged dims."""
+    M, K, N = shape
+    if dtype == "int8":
+        x = jnp.asarray(RNG.integers(-100, 100, (M, K)), jnp.int8)
+        w = jnp.asarray(RNG.integers(-100, 100, (N, K)), jnp.int8)
+        tol = 1e-5
+    else:
+        x = jnp.asarray(RNG.standard_normal((M, K)), dtype)
+        w = jnp.asarray(RNG.standard_normal((N, K)), dtype)
+        tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    out = systolic_gemm_t(x, w, interpret=True)
+    ref = systolic_gemm_t_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("act", [None, "silu", "relu2"])
+def test_systolic_gemm_t_epilogue(act):
+    M, K, N = 48, 80, 56
+    x = jnp.asarray(RNG.integers(-64, 64, (M, K)), jnp.int8)
+    w = jnp.asarray(RNG.integers(-64, 64, (N, K)), jnp.int8)
+    s = jnp.asarray(RNG.random(N) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal(N), jnp.float32)
+    out = systolic_gemm_t(x, w, s, b, activation=act, interpret=True)
+    ref = systolic_gemm_t_ref(x, w, s, b, activation=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fused_lane_gemm_t_is_the_tied_unembed():
+    """[B, S, d] against the stored [vocab, d] token table == x @ tok.T —
+    the tied-embedding LM head, no transpose copy."""
+    vocab, d = 96, 32
+    x = jnp.asarray(RNG.standard_normal((2, 5, d)), jnp.float32)
+    tok = jnp.asarray(RNG.standard_normal((vocab, d)), jnp.float32)
+    out = fused_lane_gemm_t(x, tok, interpret=True)
+    assert out.shape == (2, 5, vocab)
+    ref = jnp.einsum("bsd,vd->bsv", x, tok)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_unembed_pallas_matches_einsum_tied_and_untied():
+    """models.layers.unembed(use_pallas=True): both embedding layouts run
+    the pod kernel and match the einsum oracle."""
+    from repro.models.layers import embed_schema, init_from_schema, unembed
+    x = jnp.asarray(RNG.standard_normal((2, 3, 16)), jnp.float32)
+    for tie in (True, False):
+        p = init_from_schema(jax.random.PRNGKey(0),
+                             embed_schema(50, 16, tie))
+        p = jax.tree.map(lambda a: a.astype(jnp.float32), p)
+        ref = unembed(p, x)
+        out = unembed(p, x, use_pallas=True)
+        assert out.dtype == ref.dtype
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
 
 
 # --------------------------------------------------------------------------

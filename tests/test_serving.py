@@ -164,6 +164,24 @@ def test_decode_chunk_compile_count_bounded():
     assert eng._decode_fn._cache_size() <= int(math.log2(8)) + 1
 
 
+@pytest.mark.parametrize("arch", ["mamba2-370m", "hymba-1.5b"])
+def test_stateful_prefill_compile_count_bounded(arch):
+    """SSM / ring families now ride the bucketed path (masked state
+    updates): their prefill jit cache must obey the same <= log2(max_len)
+    bound as the dense gate, not one entry per prompt length."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.default_rng(0)
+    lengths = (3, 4, 5, 7, 9, 12, 17, 25, 31, 33, 48)   # 11 distinct
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in lengths]
+    eng, _ = _run(ServeEngine, model, params, prompts, max_new=2,
+                  slots=2, max_len=64)
+    assert eng.bucketed
+    assert eng.prefill_compiles <= int(math.log2(64))
+    assert eng.prefill_compiles < len(set(lengths))
+    assert eng.prefill_compiles == len(eng._buckets_seen)
+
+
 # --------------------------------------------------------------------------
 # src_len threading (seed regression: _prefill_into dropped src_len)
 # --------------------------------------------------------------------------
@@ -248,6 +266,52 @@ def test_pallas_backend_serves_end_to_end():
     for toks in out.values():
         assert len(toks) == 3
         assert all(0 <= t < cfg.vocab for t in toks)
+
+
+def test_moe_decode_hot_path_runs_grouped_gemm(monkeypatch):
+    """With use_pallas the MoE serving hot loop must trace the grouped
+    pod kernel into both prefill and decode (no einsum dispatch): the
+    grouped launches appear when each phase compiles, and the LM head
+    traces the fused-lane pod GEMM."""
+    import repro.kernels.systolic_gemm.ops as gops
+    calls = {"grouped": 0}
+    real = gops.grouped_gemm
+
+    def counting(*a, **k):
+        calls["grouped"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(gops, "grouped_gemm", counting)
+    cfg, model, params = _setup("dbrx-132b", use_pallas=True)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32) for n in (4, 6)]
+    _, out = _run(ServeEngine, model, params, prompts, max_new=3,
+                  slots=2, max_len=32)
+    # 3 launches (up/gate/down) x (prefill trace + decode-chunk traces)
+    assert calls["grouped"] >= 6
+    assert all(len(t) == 3 for t in out.values())
+
+
+def test_tied_embedding_lm_head_runs_transposed_kernel(monkeypatch):
+    """mamba2's tied embeddings route the unembed through the
+    transposed-weight pod GEMM (no [d, vocab] transpose copy)."""
+    import repro.kernels.systolic_gemm.ops as gops
+    calls = {"nt": 0}
+    real = gops.systolic_gemm_t
+
+    def counting(*a, **k):
+        calls["nt"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(gops, "systolic_gemm_t", counting)
+    cfg, model, params = _setup("mamba2-370m", use_pallas=True)
+    assert cfg.tie_embeddings
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 5, dtype=np.int32)]
+    _, out = _run(ServeEngine, model, params, prompts, max_new=2,
+                  slots=1, max_len=16)
+    assert calls["nt"] >= 2            # prefill + decode traces
+    assert len(out[0]) == 2
 
 
 # --------------------------------------------------------------------------
