@@ -1,0 +1,23 @@
+"""Shared knob for the --check smoke mode (benchmarks/run.py).
+
+``python -m benchmarks.run --check`` sets ``SOSA_BENCH_CHECK=1`` before
+importing the suites; suites call ``pick(full, tiny)`` on their expensive
+knobs (workload sizes, sweep grids, repeat counts) so the smoke pass
+exercises every row-emitting code path in seconds. Numbers produced under
+check mode are NOT benchmark results — the mode exists to assert that
+every suite still runs end to end (each emits its ``_total`` row and no
+``ERROR`` rows), as part of the documented fast gate.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def check_mode() -> bool:
+    return os.environ.get("SOSA_BENCH_CHECK") == "1"
+
+
+def pick(full, tiny):
+    """`full` normally; `tiny` under --check."""
+    return tiny if check_mode() else full

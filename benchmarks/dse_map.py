@@ -13,11 +13,15 @@ import time
 from repro.core.dse import best_point, sweep, sweep_scalar
 from repro.core.workloads import dse_cnn_suite, dse_transformer_suite
 
+from ._check import pick
+
 FIG5_ROWS = (8, 16, 20, 32, 48, 64, 66, 128, 256)
 FIG5_COLS = (8, 16, 32, 64, 128, 256)
 
 
 def bench() -> list[str]:
+    grid_rows = pick(FIG5_ROWS, (20, 32, 66))
+    grid_cols = pick(FIG5_COLS, (32, 128))
     lines = []
     cnn = dse_cnn_suite()
     tfm = dse_transformer_suite()
@@ -26,7 +30,7 @@ def bench() -> list[str]:
                                    ("transformer", tfm, "20x128"),
                                    ("mixed", mixed, "20x32..32x32")):
         t0 = time.time()
-        pts = sweep(suite, FIG5_ROWS, FIG5_COLS)
+        pts = sweep(suite, grid_rows, grid_cols)
         us = (time.time() - t0) * 1e6 / len(pts)
         best = best_point(pts)
         lines.append(
@@ -44,10 +48,10 @@ def bench() -> list[str]:
 
     # engine comparison on the mixed Fig-5 grid: batched vs scalar wall time
     t0 = time.time()
-    pts_b = sweep(mixed, FIG5_ROWS, FIG5_COLS)
+    pts_b = sweep(mixed, grid_rows, grid_cols)
     t_batched = time.time() - t0
     t0 = time.time()
-    pts_s = sweep_scalar(mixed, FIG5_ROWS, FIG5_COLS)
+    pts_s = sweep_scalar(mixed, grid_rows, grid_cols)
     t_scalar = time.time() - t0
     bb, bs = best_point(pts_b), best_point(pts_s)
     agree = (bb.rows, bb.cols) == (bs.rows, bs.cols)

@@ -14,6 +14,8 @@ from repro.core import ArrayConfig, AcceleratorConfig, simulate
 from repro.core.simulator import icn_spec_for
 from repro.core.workloads import bert, resnet
 
+from ._check import pick
+
 PAPER_TABLE1 = {  # type -> (busy %, cycles/tile, mW/B) at 256 pods
     "butterfly-1": (66.81, 19.72, 0.23), "butterfly-2": (72.41, 20.17, 0.52),
     "butterfly-4": (72.26, 20.27, 1.15), "butterfly-8": (72.43, 20.48, 2.53),
@@ -21,14 +23,17 @@ PAPER_TABLE1 = {  # type -> (busy %, cycles/tile, mW/B) at 256 pods
 }
 
 
-def bench(pods: int = 256) -> list[str]:
+def bench(pods: int | None = None) -> list[str]:
     from repro.core.simulator import merge_workloads
+    pods = pods or pick(256, 16)
     # batch-4 mix: enough parallel tiles to load 256 pods (the paper
     # averages across its full benchmark suite)
     wl = merge_workloads(resnet(50, 224, batch=2), bert("base", 100, batch=2))
+    wl = wl[:pick(len(wl), 12)]
     lines = []
-    for icn in ("butterfly-1", "butterfly-2", "butterfly-4", "butterfly-8",
-                "crossbar", "benes"):
+    for icn in pick(("butterfly-1", "butterfly-2", "butterfly-4",
+                     "butterfly-8", "crossbar", "benes"),
+                    ("butterfly-2", "crossbar")):
         accel = AcceleratorConfig(
             array=ArrayConfig(32, 32), num_pods=pods,
             icn_mw_per_byte=icn_spec_for(icn, 256).mw_per_byte)

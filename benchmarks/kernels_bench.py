@@ -15,6 +15,8 @@ from repro.kernels.ssd.ops import ssd
 from repro.kernels.systolic_gemm.ops import systolic_gemm
 from repro.parallel.autoshard import choose_blocks
 
+from ._check import pick
+
 
 def _time(fn, *args, n=3, warmup=1, **kw):
     """Steady-state timing: warm (compile) calls first, then min-of-n with
@@ -34,7 +36,7 @@ def bench() -> list[str]:
     rng = np.random.default_rng(0)
     lines = []
 
-    M = K = N = 512
+    M = K = N = pick(512, 256)
     x8 = jnp.asarray(rng.integers(-100, 100, (M, K)), jnp.int8)
     w8 = jnp.asarray(rng.integers(-100, 100, (K, N)), jnp.int8)
     us = _time(systolic_gemm, x8, w8, interpret=True)
@@ -46,7 +48,7 @@ def bench() -> list[str]:
                  f"jnp_ref_us={us_ref:.0f};blocks={bm}x{bn}x{bk};"
                  f"vmem_kb={vmem_kb:.0f}")
 
-    B, S, H, D = 1, 256, 4, 64
+    B, S, H, D = 1, pick(256, 128), 4, 64
     q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, 2, D)), jnp.float32)
@@ -56,7 +58,7 @@ def bench() -> list[str]:
                  f"blocks=128x128;vmem_kb="
                  f"{(128 * D * 4 * 2 + 128 * D * 4) / 1024:.0f}")
 
-    b, S2, H2, P, Nn = 1, 256, 4, 32, 64
+    b, S2, H2, P, Nn = 1, pick(256, 128), 4, 32, 64
     xs = jnp.asarray(rng.standard_normal((b, S2, H2, P)), jnp.float32)
     dt = jnp.asarray(rng.random((b, S2, H2)) * 0.3 + 0.1, jnp.float32)
     A = jnp.asarray(-rng.random(H2) - 0.1, jnp.float32)

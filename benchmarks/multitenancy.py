@@ -20,6 +20,8 @@ import time
 from repro.core import AcceleratorConfig, ArrayConfig, simulate
 from repro.tenancy import fig11_mixes, fig11_sweep, plan_mix_scalar
 
+from ._check import pick
+
 _BATCHES = (1, 2, 4, 8)
 
 
@@ -57,8 +59,11 @@ def bench(pods: int = 256) -> list[str]:
     # sequential and merged runs timed separately (they ARE the two
     # phases being compared; the old bench stamped one cumulative time on
     # every line)
-    accel_s = AcceleratorConfig(array=ArrayConfig(32, 32), num_pods=128)
-    streams = [list(t.gemms) for t in mix.tenants for _ in range(t.replicas)]
+    accel_s = AcceleratorConfig(array=ArrayConfig(32, 32),
+                                num_pods=pick(128, 16))
+    cap = pick(None, 8)  # --check: slice-sim a bounded stream prefix
+    streams = [list(t.gemms)[:cap] for t in mix.tenants
+               for _ in range(t.replicas)]
     t0 = time.time()
     seq = [simulate(wl, accel_s) for wl in streams]
     us_seq = (time.time() - t0) * 1e6
@@ -66,8 +71,10 @@ def bench(pods: int = 256) -> list[str]:
     util_seq = sum(r.total_macs for r in seq) / (
         accel_s.num_pods * accel_s.array.num_pe * seq_cycles)
     eff_seq = accel_s.peak_ops_at_tdp * util_seq / 1e12
+    merged = mix.merged()
+    merged = merged[:pick(len(merged), 16)]
     t0 = time.time()
-    par = simulate(mix.merged(), accel_s)
+    par = simulate(merged, accel_s)
     us_par = (time.time() - t0) * 1e6
     lines.append(f"multitenancy/sequential,{us_seq:.0f},eff_tops={eff_seq:.1f}")
     lines.append(f"multitenancy/parallel,{us_par:.0f},"

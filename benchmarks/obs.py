@@ -1,0 +1,125 @@
+"""Observability suite: the serving telemetry layer (src/repro/obs/).
+
+Rows (`obs/...`):
+
+  * `obs/effective_tops_{prefill,decode}` — the paper's headline metric,
+    live: measured tokens/s from the engine's metrics counters, converted
+    to useful-MAC throughput over the recorded GEMM timeline and scaled
+    by the kernel autotuner's padded-MAC tile utilization. (CPU wall
+    clock, so the absolute TOPS are interpret-scale; the row exists so
+    the trajectory of the *measured* number is tracked next to the model.)
+  * `obs/drift_{prefill,decode}` — predicted (wave model) vs measured
+    (slice-accurate scheduler) utilization of the recorded timeline at a
+    paper-scale design point; `drift` must stay inside the calibrated
+    <=1.55x band (gated by tests/test_obs.py).
+  * `obs/trace_export` — Chrome trace-event / Perfetto JSON export timing
+    for the run's spans.
+  * `obs/metrics_overhead` — wall-clock ratio of a metrics+tracer engine
+    run over a bare one on the same workload (the zero-sync claim is
+    gated by tests; this row tracks the host-side cost).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from ._check import pick
+
+
+def _serve(metrics, tracer, lengths, max_new, model, params):
+    from repro.serve.engine import Request, ServeEngine
+    eng = ServeEngine(model, params, slots=4, max_len=64,
+                      metrics=metrics, tracer=tracer)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, eng.model.cfg.vocab, int(n),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=500)
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    return eng, dt
+
+
+def bench() -> list[str]:
+    from repro.configs import get_arch, reduced
+    from repro.models.model import Model
+    from repro.obs.drift import drift_report, effective_tops_summary
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.metrics import MetricsRegistry
+    from repro.parallel.autoshard import choose_blocks
+    from repro.tenancy.trace import ServeTraceRecorder
+
+    lines: list[str] = []
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lengths = pick(list(range(5, 53, 4)), [5, 9])   # 12 lens full / 2 tiny
+    max_new = pick(9, 3)
+
+    # warm pass compiles every bucket/chunk variant; the measured pass is
+    # the one the telemetry reports (warm + single pass: the obs rows are
+    # about the telemetry layer, not a horse race)
+    _serve(None, None, lengths, max_new, model, params)
+    metrics = MetricsRegistry()
+    rec = ServeTraceRecorder()
+    _, traced_dt = _serve(metrics, rec, lengths, max_new, model, params)
+
+    # autotune the run's dominant GEMM shapes so the tile-util gauges the
+    # effective-TOPS row folds in are the ones serving would use
+    for m in (len(lengths), 64):
+        choose_blocks(m, cfg.d_model, cfg.d_ff)
+
+    from repro.obs.metrics import registry as global_registry
+    eff = effective_tops_summary(rec, cfg, metrics,
+                                 kernel_metrics=global_registry())
+    for row in eff:
+        lines.append(
+            f"obs/effective_tops_{row.phase},0,"
+            f"tok_s={row.tok_s:.1f};macs_per_tok={row.macs_per_token:.0f};"
+            f"tile_util={row.tile_utilization:.3f};"
+            f"measured_tops={row.measured_tops:.3e};"
+            f"effective_tops={row.effective_tops:.3e}")
+
+    t0 = time.perf_counter()
+    drift = drift_report(rec, cfg, metrics=metrics,
+                         max_events_per_phase=pick(32, 4))
+    drift_us = (time.perf_counter() - t0) * 1e6 / max(1, len(drift))
+    for row in drift:
+        lines.append(
+            f"obs/drift_{row.phase},{drift_us:.0f},"
+            f"events={row.events};gemms={row.gemms};"
+            f"predicted_util={row.predicted_utilization:.4f};"
+            f"measured_util={row.measured_utilization:.4f};"
+            f"drift={row.drift:.3f}x;"
+            f"predicted_eff_tops={row.predicted_effective_tops:.2f};"
+            f"measured_eff_tops={row.measured_effective_tops:.2f}")
+
+    path = os.path.join(tempfile.mkdtemp(prefix="sosa-obs-"), "trace.json")
+    t0 = time.perf_counter()
+    n_spans = write_chrome_trace(path, rec.spans)
+    export_us = (time.perf_counter() - t0) * 1e6
+    n_events = len(json.load(open(path))["traceEvents"])
+    lines.append(f"obs/trace_export,{export_us:.0f},"
+                 f"spans={n_spans};trace_events={n_events};"
+                 f"bytes={os.path.getsize(path)}")
+
+    # telemetry overhead: same warm workload, bare engine vs instrumented
+    _, bare_dt = _serve(None, None, lengths, max_new, model, params)
+    snap = metrics.snapshot()
+    n_series = sum(len(snap[k]) for k in ("counters", "gauges", "histograms"))
+    lines.append(f"obs/metrics_overhead,0,"
+                 f"traced_s={traced_dt:.3f};bare_s={bare_dt:.3f};"
+                 f"overhead={traced_dt / bare_dt:.3f}x;"
+                 f"series={n_series}")
+    return lines

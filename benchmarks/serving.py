@@ -29,6 +29,8 @@ import time
 import jax
 import numpy as np
 
+from ._check import pick
+
 
 def _mk_engine_parts(arch="granite-8b", seed=0):
     from repro.configs import get_arch, reduced
@@ -55,7 +57,7 @@ def _prefill_phase(lines):
     from repro.serve.engine import ServeEngine
     from repro.serve.reference import ReferenceEngine
     cfg, model, params = _mk_engine_parts()
-    lengths = list(range(9, 57, 2))                  # 24 distinct, buckets
+    lengths = pick(list(range(9, 57, 2)), [9, 17])   # 24 distinct, buckets
     max_len = 64                                     # {16, 32, 64}
     rng = np.random.default_rng(0)
 
@@ -100,7 +102,7 @@ def _decode_phase(lines):
     from repro.serve.engine import ServeEngine
     from repro.serve.reference import ReferenceEngine
     cfg, model, params = _mk_engine_parts()
-    max_new = 33                                     # 32 decode steps
+    max_new = pick(33, 5)                            # 32 decode steps
     lengths = [8, 8, 8, 8]
 
     def decode_run(engine):
@@ -165,8 +167,8 @@ def _family_phase(lines):
     Timing is warm + min-of-2 on the jnp backend."""
     import dataclasses
     from repro.serve.engine import ServeEngine
-    lengths = list(range(5, 53, 4))                  # 12 distinct lengths
-    max_new = 9
+    lengths = pick(list(range(5, 53, 4)), [5, 9])    # 12 distinct lengths
+    max_new = pick(9, 3)
     for arch, tag in (("dbrx-132b", "moe"), ("mamba2-370m", "ssm")):
         cfg, model, params = _mk_engine_parts(arch)
         if cfg.moe is not None:

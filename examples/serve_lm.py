@@ -1,16 +1,28 @@
 """Example: batched serving with continuous batching (the paper's kind —
 SOSA is an inference accelerator; multi-tenant co-scheduling is its §6.1
-argument, realized here as mixed-length requests sharing decode batches).
+argument, realized here as mixed-length requests sharing decode batches),
+with the full telemetry stack on: the metrics snapshot prints after the
+run and the timeline lands as a Perfetto-loadable Chrome trace.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
 
+import json
+import os
 import subprocess
 import sys
+import tempfile
 
+trace_path = os.path.join(tempfile.mkdtemp(prefix="sosa-serve-"),
+                          "serve_trace.json")
 p = subprocess.run([
     sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",
     "--reduced", "--requests", "6", "--slots", "3", "--max-new", "10",
-    "--max-len", "96"])
+    "--max-len", "96", "--metrics", "--trace-out", trace_path])
 assert p.returncode == 0
+doc = json.load(open(trace_path))
+spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+assert spans, "serving run exported no spans"
+print(f"trace: {len(spans)} spans at {trace_path} "
+      f"(drag into ui.perfetto.dev)")
 print("batched serving example: OK")

@@ -1,7 +1,12 @@
 """Serving driver: batched requests through the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --requests 6 --slots 3 --max-new 12
+        --requests 6 --slots 3 --max-new 12 \
+        --metrics --trace-out /tmp/serve_trace.json
+
+`--metrics` prints the engine's telemetry snapshot (obs.metrics) after the
+run; `--trace-out PATH` writes the run as Chrome trace-event JSON —
+drag-and-drop it into ui.perfetto.dev or chrome://tracing.
 """
 
 from __future__ import annotations
@@ -25,6 +30,10 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the obs.metrics snapshot after the run")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="write the run as Perfetto/Chrome trace JSON")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -32,8 +41,16 @@ def main():
         cfg = reduce_cfg(cfg)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    metrics = tracer = None
+    if args.metrics:
+        from repro.obs.metrics import MetricsRegistry
+        metrics = MetricsRegistry()
+    if args.trace_out:
+        from repro.tenancy.trace import ServeTraceRecorder
+        tracer = ServeTraceRecorder()
     engine = ServeEngine(model, params, slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len, metrics=metrics,
+                         tracer=tracer)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -55,6 +72,14 @@ def main():
     print(f"{args.requests} requests, {total_new} tokens, {steps} engine "
           f"steps, {dt:.1f}s ({1000 * dt / max(1, total_new):.0f} ms/tok "
           f"on CPU)")
+    if metrics is not None:
+        print("metrics snapshot:")
+        print(metrics.dumps(indent=1))
+    if tracer is not None:
+        from repro.obs.export import write_chrome_trace
+        n = write_chrome_trace(args.trace_out, tracer.spans)
+        print(f"wrote {n} spans to {args.trace_out} "
+              f"(open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -140,21 +140,13 @@ def _rup8(d: int) -> int:
 
 
 @functools.lru_cache(maxsize=4096)
-def choose_blocks(m: int, k: int, n: int,
-                  candidates=(128, 256, 512),
-                  dtype_bytes: int = 2, out_bytes: int = 4,
-                  vmem_budget: int = _VMEM_BUDGET) -> tuple[int, int, int]:
-    """Pallas GEMM block sizes for an (m x k) @ (k x n) GEMM, chosen by the
-    SOSA DSE cost model (see kernels/systolic_gemm/systolic_gemm.py for the
-    full autotuner contract).
-
-    For each candidate (bm, bn, bk) the kernel-effective geometry (blocks
-    clipped to the padded problem, exactly as ops.systolic_gemm clips) is
-    scored as a roofline: max(padded-MAC compute time, HBM stream time)
-    over `tile_stats`' closed-form grid counts, subject to the VMEM budget
-    (double-buffered x/w blocks + accumulator + output block). Returns the
-    best (block_m, block_n, block_k); results are lru-cached per shape.
-    """
+def _choose_blocks_cached(m: int, k: int, n: int,
+                          candidates=(128, 256, 512),
+                          dtype_bytes: int = 2, out_bytes: int = 4,
+                          vmem_budget: int = _VMEM_BUDGET
+                          ) -> tuple[int, int, int]:
+    """The cached autotuner body behind `choose_blocks` (which adds the
+    obs telemetry: cache hit/miss counters + per-shape utilization)."""
     # selection key: roofline time, then HBM traffic (a compute-bound tie
     # must not pick the max-traffic geometry), then VMEM footprint
     best, best_key = (MXU, MXU, MXU), (float("inf"),) * 3
@@ -194,6 +186,69 @@ def choose_blocks(m: int, k: int, n: int,
                 if key < best_key:
                     best, best_key = (bm, bn, bk), key
     return best
+
+
+def tile_utilization(m: int, k: int, n: int,
+                     blocks: tuple[int, int, int]) -> float:
+    """Padded-MAC utilization of an (m x k) @ (k x n) GEMM under a block
+    geometry: useful MACs over the MACs the padded grid actually streams
+    (the kernel pads every dim to its clipped block). This is the tile
+    component of the paper's effective-throughput metric — the live
+    effective-TOPS gauge (obs/drift.py) multiplies measured token
+    throughput by it."""
+    bm, bn, bk = blocks
+    bm_e, bn_e, bk_e = (min(bm, _rup8(m)), min(bn, _rup8(n)),
+                        min(bk, _rup8(k)))
+    st = tile_stats([GemmSpec(d1=m, d2=k, d3=n)],
+                    ArrayConfig(rows=bk_e, cols=bn_e), k_part=bm_e)
+    n_i, n_j, n_l = int(st.n_i[0]), int(st.n_j[0]), int(st.n_l[0])
+    padded = (n_i * bm_e) * (n_j * bk_e) * (n_l * bn_e)
+    return (m * k * n) / padded if padded else 0.0
+
+
+def choose_blocks(m: int, k: int, n: int,
+                  candidates=(128, 256, 512),
+                  dtype_bytes: int = 2, out_bytes: int = 4,
+                  vmem_budget: int = _VMEM_BUDGET) -> tuple[int, int, int]:
+    """Pallas GEMM block sizes for an (m x k) @ (k x n) GEMM, chosen by the
+    SOSA DSE cost model (see kernels/systolic_gemm/systolic_gemm.py for the
+    full autotuner contract).
+
+    For each candidate (bm, bn, bk) the kernel-effective geometry (blocks
+    clipped to the padded problem, exactly as ops.systolic_gemm clips) is
+    scored as a roofline: max(padded-MAC compute time, HBM stream time)
+    over `tile_stats`' closed-form grid counts, subject to the VMEM budget
+    (double-buffered x/w blocks + accumulator + output block). Returns the
+    best (block_m, block_n, block_k); results are lru-cached per shape
+    (`choose_blocks.cache_info()` / `.cache_clear()` reach the cache).
+
+    Every call records telemetry into the process-global obs registry
+    (obs.metrics.registry): an `autotune.cache{result=hit|miss}` counter,
+    and — on a miss — the chosen geometry (`autotune.choice{...}`) plus
+    the shape's padded-MAC utilization gauge `autotune.tile_util{shape=
+    MxKxN}`, the tile component of the live effective-TOPS gauge.
+    Recording is host-side Python at trace time only (block choice happens
+    while jit traces, never per device call).
+    """
+    before = _choose_blocks_cached.cache_info().misses
+    blocks = _choose_blocks_cached(
+        m, k, n, tuple(candidates), dtype_bytes, out_bytes, vmem_budget)
+    hit = _choose_blocks_cached.cache_info().misses == before
+    from ..obs.metrics import registry
+    reg = registry()
+    reg.counter("autotune.cache", result="hit" if hit else "miss").inc()
+    if not hit:
+        shape = f"{m}x{k}x{n}"
+        bm, bn, bk = blocks
+        reg.counter("autotune.choice", shape=shape,
+                    blocks=f"{bm}x{bn}x{bk}").inc()
+        reg.gauge("autotune.tile_util", shape=shape).set(
+            tile_utilization(m, k, n, blocks))
+    return blocks
+
+
+choose_blocks.cache_info = _choose_blocks_cached.cache_info
+choose_blocks.cache_clear = _choose_blocks_cached.cache_clear
 
 
 @functools.lru_cache(maxsize=4096)

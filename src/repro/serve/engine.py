@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Optional
 
 import jax
@@ -74,7 +75,7 @@ class ServeEngine:
                  max_len: int = 512, src_len: int = 0,
                  eos_id: Optional[int] = None, tracer=None,
                  decode_chunk: int = 8, prefill_buckets: bool = True,
-                 min_bucket: int = 8):
+                 min_bucket: int = 8, metrics=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -83,8 +84,15 @@ class ServeEngine:
         self.eos_id = eos_id
         # optional duck-typed event sink (tenancy.ServeTraceRecorder): gets
         # on_prefill(rid, prompt_len) / on_decode(lanes, contexts) in the
-        # engine's step-locked order
+        # engine's step-locked order, and (if it defines on_span) one timed
+        # span per device call for the Perfetto export (obs/export.py)
         self.tracer = tracer
+        # optional obs.metrics.MetricsRegistry. Recording is host-side
+        # bookkeeping on values the engine already has at each chunk
+        # boundary: metrics-on adds no host syncs and no jit cache entries
+        # (the device-side accumulators below run unconditionally), gated
+        # by tests/test_serving.py.
+        self.metrics = metrics
         self.decode_chunk = max(1, decode_chunk)
         self.min_bucket = max(1, min_bucket)
         self.bucketed = bool(prefill_buckets) and model.bucketed_prefill_ok
@@ -98,10 +106,57 @@ class ServeEngine:
         self._prefill_fn = jax.jit(self._prefill_batched_impl)
         self._decode_fn = jax.jit(self._decode_chunk_impl,
                                   static_argnames=("n",))
+        self._t0 = time.perf_counter()
+
+    # -- telemetry ------------------------------------------------------
+    def _span(self, name: str, cat: str, t_start: float, t_end: float,
+              **args) -> None:
+        """Emit a timed span to the tracer (engine-relative wall clock);
+        no-op unless the tracer understands spans (on_span)."""
+        if self.tracer is not None and hasattr(self.tracer, "on_span"):
+            self.tracer.on_span(name, ts=t_start - self._t0,
+                                dur=t_end - t_start, cat=cat, **args)
+
+    def _observe_prefill(self, path: str, tokens: int, lanes: int,
+                        seconds: float) -> None:
+        m = self.metrics
+        if m is None:
+            return
+        m.counter("serve.prefill.calls", path=path).inc()
+        m.counter("serve.prefill.tokens").inc(tokens)
+        m.counter("serve.prefill.seconds").inc(seconds)
+        m.histogram("serve.prefill.us").record(seconds * 1e6)
+        m.gauge("serve.prefill.lanes").set(lanes)
+        m.gauge("serve.queue_depth").set(len(self.queue))
+
+    def _observe_decode(self, n: int, lanes: int, emitted: int,
+                        live_end: int, seconds: float) -> None:
+        m = self.metrics
+        if m is None:
+            return
+        m.counter("serve.decode.chunks").inc()
+        m.counter("serve.decode.tokens").inc(emitted)
+        m.counter("serve.decode.seconds").inc(seconds)
+        m.histogram("serve.decode.chunk_len").record(n)
+        m.gauge("serve.slot_occupancy").set(lanes / self.slots)
+        m.gauge("serve.decode.live_lanes_end").set(live_end)
+        m.gauge("serve.queue_depth").set(len(self.queue))
+        if emitted:
+            # honest next-token wait: every token delivered at this chunk's
+            # host sync waited the chunk's full wall time (the p50/p99 the
+            # serving benchmark reports, now live)
+            m.histogram("serve.decode.token_wait_us").record(
+                seconds * 1e6, n=emitted)
+        tok = m.counter("serve.decode.tokens").value
+        sec = m.counter("serve.decode.seconds").value
+        if sec > 0:
+            m.gauge("serve.decode.tok_s").set(tok / sec)
 
     # -- request flow --------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        if self.metrics is not None:
+            self.metrics.gauge("serve.queue_depth").set(len(self.queue))
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
@@ -164,10 +219,18 @@ class ServeEngine:
             if self.tracer is not None:
                 self.tracer.on_prefill(r.rid, S)
         self._buckets_seen.add(bucket)
+        t_start = time.perf_counter()
         first, self.cache = self._prefill_fn(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(slot_ids), jnp.asarray(true_lens))
         first = np.asarray(first)
+        t_end = time.perf_counter()
+        n_tokens = int(sum(len(r.prompt) for r in reqs))
+        self._span(f"prefill/bucket{bucket}", "prefill", t_start, t_end,
+                   bucket=bucket, lanes=len(reqs), tokens=n_tokens,
+                   rids=[r.rid for r in reqs])
+        self._observe_prefill("bucketed", n_tokens, len(reqs),
+                              t_end - t_start)
         for g, (r, s) in enumerate(zip(reqs, slot_list)):
             r.out.append(int(first[g]))
             self.active[s] = r
@@ -220,6 +283,7 @@ class ServeEngine:
         if self.tracer is not None:
             self.tracer.on_prefill(req.rid, S)
         self._buckets_seen.add(S)     # exact-length path: one shape per len
+        t_start = time.perf_counter()
         lane_cache = self.model.init_cache(1, self.max_len,
                                            src_len=self.src_len)
         batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
@@ -229,6 +293,10 @@ class ServeEngine:
                                                 lane_cache)
         self.cache = _write_lane(self.cache, lane_cache, slot)
         req.out.append(int(jnp.argmax(logits[0])))
+        t_end = time.perf_counter()
+        self._span(f"prefill/exact{S}", "prefill", t_start, t_end,
+                   bucket=S, lanes=1, tokens=S, rids=[req.rid])
+        self._observe_prefill("exact", S, 1, t_end - t_start)
         self.active[slot] = req
         self.positions[slot] = S
         self.budgets[slot] = self._clamped_budget(req)
@@ -256,14 +324,18 @@ class ServeEngine:
                            n: int):
         """n fused decode steps as one lax.scan on device. Carries the
         batched cache + per-lane (token, position, budget, alive) vectors;
-        emits the per-step greedy tokens and emit masks. A lane whose
-        budget runs out (or that hits eos) drops out of the emit mask but
-        keeps decoding inertly until the chunk ends — its slot is freed at
-        the next admission boundary and prefill fully rewrites the lane."""
+        emits the per-step greedy tokens and emit masks, plus the chunk's
+        telemetry accumulators (emitted-token total and live-lane count at
+        chunk end) carried on device and drained with the chunk's one host
+        sync — metrics read them for free, so metrics-on adds no syncs.
+        A lane whose budget runs out (or that hits eos) drops out of the
+        emit mask but keeps decoding inertly until the chunk ends — its
+        slot is freed at the next admission boundary and prefill fully
+        rewrites the lane."""
         eos = self.eos_id
 
         def step(carry, _):
-            cache, toks, pos, bud, alive = carry
+            cache, toks, pos, bud, alive, emitted = carry
             logits, cache = self.model.decode_step(params, toks, cache, pos)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             emit = alive
@@ -274,11 +346,14 @@ class ServeEngine:
                 done = done | (nxt == eos)
             alive = alive & ~done
             pos = pos + 1
-            return (cache, toks, pos, bud, alive), (toks, emit)
+            emitted = emitted + emit.sum(dtype=jnp.int32)
+            return (cache, toks, pos, bud, alive, emitted), (toks, emit)
 
-        (cache, *_), (seq, emits) = jax.lax.scan(
-            step, (cache, toks, pos, bud, alive), None, length=n)
-        return cache, seq, emits
+        carry0 = (cache, toks, pos, bud, alive, jnp.int32(0))
+        (cache, _, _, _, alive, emitted), (seq, emits) = jax.lax.scan(
+            step, carry0, None, length=n)
+        stats = jnp.stack([emitted, alive.sum(dtype=jnp.int32)])
+        return cache, seq, emits, stats
 
     def _chunk_len(self, live: list[int]) -> int:
         # queue waiting -> sync at the soonest lane completion (admit
@@ -304,11 +379,19 @@ class ServeEngine:
             toks[i] = self.active[i].out[-1]
             alive0[i] = True
         pos0 = self.positions.copy()
-        self.cache, seq, emits = self._decode_fn(
+        t_start = time.perf_counter()
+        self.cache, seq, emits, stats = self._decode_fn(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos0),
             jnp.asarray(self.budgets), jnp.asarray(alive0), n=n)
         seq = np.asarray(seq)                         # the ONE host sync
         emits = np.asarray(emits)
+        stats = np.asarray(stats)     # device accumulators, already ready
+        t_end = time.perf_counter()
+        self._span(f"decode/chunk{n}", "decode", t_start, t_end,
+                   steps=n, lanes=len(live), tokens=int(stats[0]),
+                   live_end=int(stats[1]))
+        self._observe_decode(n, len(live), int(stats[0]), int(stats[1]),
+                             t_end - t_start)
         if self.tracer is not None:                   # step-locked replay
             for s in range(n):
                 lanes = [i for i in live if emits[s, i]]

@@ -28,6 +28,7 @@ import dataclasses
 from ..configs.base import ArchConfig
 from ..core.tiling import GemmSpec
 from ..core.workloads import _Trace
+from ..obs.export import Span
 from .mix import Tenant
 
 
@@ -37,15 +38,27 @@ class ServeTraceRecorder:
 
     Events are ("prefill", prompt_len) and ("decode", lanes, contexts) in
     engine wall-clock order — the step-locked sequence the pods would see.
+
+    Events carry the GEMM-shaping facts (what `trace_to_gemms` lowers);
+    `spans` additionally carry the host wall-clock of every device call
+    the engine made (one span per prefill launch / fused decode chunk),
+    which `obs.export.to_chrome_trace` turns into a Perfetto-loadable
+    timeline and `obs.drift` pairs with the wave-model prediction.
     """
 
     events: list[tuple] = dataclasses.field(default_factory=list)
+    spans: list[Span] = dataclasses.field(default_factory=list)
 
     def on_prefill(self, rid: int, prompt_len: int) -> None:
         self.events.append(("prefill", int(prompt_len)))
 
     def on_decode(self, lanes: int, contexts: list[int]) -> None:
         self.events.append(("decode", int(lanes), tuple(int(c) for c in contexts)))
+
+    def on_span(self, name: str, ts: float, dur: float, cat: str = "serve",
+                **args) -> None:
+        self.spans.append(Span(name=name, ts=float(ts), dur=float(dur),
+                               cat=cat, args=args))
 
     @property
     def num_prefills(self) -> int:
@@ -54,6 +67,15 @@ class ServeTraceRecorder:
     @property
     def num_decode_steps(self) -> int:
         return sum(1 for e in self.events if e[0] == "decode")
+
+    def phase_seconds(self, cat: str) -> float:
+        """Total host wall-clock spent in spans of category `cat`."""
+        return sum(s.dur for s in self.spans if s.cat == cat)
+
+    def phase_tokens(self, kind: str) -> int:
+        """Tokens processed by events of `kind`: prompt tokens for
+        prefills, emitted (per-lane) tokens for decode steps."""
+        return sum(e[1] for e in self.events if e[0] == kind)
 
 
 def _layer_gemms(t: _Trace, cfg: ArchConfig, d1: int, attn_d1: int,
@@ -78,7 +100,9 @@ def _layer_gemms(t: _Trace, cfg: ArchConfig, d1: int, attn_d1: int,
 
 def trace_to_gemms(recorder: ServeTraceRecorder, cfg: ArchConfig,
                    include_attention: bool = True,
-                   include_lm_head: bool = False) -> list[GemmSpec]:
+                   include_lm_head: bool = False,
+                   kinds: tuple[str, ...] | None = None,
+                   max_events: int | None = None) -> list[GemmSpec]:
     """Lower a recorded serving timeline to a GemmSpec stream.
 
     Events chain sequentially (the engine is step-locked: a prefill or a
@@ -86,9 +110,20 @@ def trace_to_gemms(recorder: ServeTraceRecorder, cfg: ArchConfig,
     within an event — the same dependency discipline as
     workloads.transformer_lm, with d1 set by what the engine actually
     batched rather than a hypothetical shape.
+
+    `kinds` restricts the lowering to a subset of event kinds (e.g.
+    ``("decode",)`` for the per-phase drift rows of obs/drift.py); the
+    filtered events still chain sequentially among themselves.
+    `max_events` caps the number of (filtered) events lowered — the
+    slice-accurate scheduler the drift check runs is O(tiles), so drift
+    sampling bounds it.
     """
     t = _Trace()
-    for ev in recorder.events:
+    events = recorder.events if kinds is None else \
+        [e for e in recorder.events if e[0] in kinds]
+    if max_events is not None:
+        events = events[:max_events]
+    for ev in events:
         if ev[0] == "prefill":
             seq = ev[1]
             for _ in range(cfg.n_layers):
@@ -119,8 +154,14 @@ def trace_tenant(name: str, recorder: ServeTraceRecorder, cfg: ArchConfig,
     """Recorded serving stream as a planner Tenant (see tenancy/mix.py)."""
     gemms = trace_to_gemms(recorder, cfg, **kw)
     if not gemms:
+        wanted = kw.get("kinds") or ("prefill", "decode")
+        recorded = sorted({e[0] for e in recorder.events})
+        missing = [k for k in wanted if k not in recorded] or list(wanted)
         raise ValueError(
-            f"tenant {name!r}: recorder saw no prefill/decode events — "
-            "was the engine constructed with tracer=recorder and run?")
+            f"tenant {name!r}: recorder saw no {'/'.join(missing)} events"
+            f" (recorded phases: {', '.join(recorded) if recorded else 'none'})"
+            " — construct the engine with ServeEngine(tracer=recorder) (the"
+            " `tracer` kwarg) and run it through the missing phase before"
+            " lowering the trace")
     return Tenant(name=name, gemms=tuple(gemms), replicas=replicas,
                   slo_latency_s=slo_latency_s)

@@ -1,0 +1,306 @@
+"""Observability layer tests: metrics registry semantics, engine
+telemetry population, Chrome trace-event export, kernel autotune metrics,
+and the model-vs-measured drift gate (the wave model's predicted
+utilization over the slice-accurate scheduler's measured utilization on
+the engine's actually-recorded timeline must stay inside the calibrated
+parity band of tests/test_simulator.py)."""
+
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models.model import Model
+from repro.obs.drift import drift_report, effective_tops_summary
+from repro.obs.export import Span, to_chrome_trace, write_chrome_trace
+from repro.obs.metrics import MetricsRegistry, percentile, registry
+from repro.serve.engine import Request, ServeEngine
+from repro.tenancy.trace import ServeTraceRecorder
+
+# the wave model may be optimistic by up to the bert-family calibrated
+# ceiling (tests/test_simulator.py PARITY_CASES) and must never predict
+# below the slice-accurate scheduler by more than the resnet floor
+DRIFT_BAND = (0.8, 1.55)
+
+
+# --------------------------------------------------------------------------
+# metrics registry
+# --------------------------------------------------------------------------
+
+def test_counter_gauge_series_and_labels():
+    reg = MetricsRegistry()
+    reg.counter("hits", path="bucketed").inc()
+    reg.counter("hits", path="bucketed").inc(2)
+    reg.counter("hits", path="exact").inc()
+    reg.gauge("depth").set(7)
+    assert reg.value("hits", path="bucketed") == 3
+    assert reg.value("hits", path="exact") == 1
+    assert reg.value("depth") == 7
+    assert reg.value("never_written") is None
+    # same name, different labels -> distinct series, both findable
+    assert set(reg.find("hits")) == {"hits{path=bucketed}",
+                                     "hits{path=exact}"}
+    with pytest.raises(ValueError):
+        reg.counter("hits", path="exact").inc(-1)
+
+
+def test_histogram_percentiles_and_decimation():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat")
+    for v in range(1, 101):
+        h.record(float(v))
+    s = h.summary()
+    assert s["count"] == 100
+    assert s["min"] == 1 and s["max"] == 100
+    assert s["p50"] == pytest.approx(np.percentile(range(1, 101), 50))
+    assert s["p99"] == pytest.approx(np.percentile(range(1, 101), 99))
+    # bounded buffer: exact count/total survive decimation
+    from repro.obs.metrics import Histogram
+    small = Histogram(max_samples=8)
+    for v in range(1000):
+        small.record(float(v))
+    assert small.count == 1000
+    assert len(small._samples) <= 8
+    assert small.max == 999.0
+    # n-at-once recording (a chunk charging every delivered token)
+    hh = Histogram()
+    hh.record(5.0, n=10)
+    assert hh.count == 10 and hh.total == 50.0
+
+
+def test_percentile_matches_numpy():
+    vals = [3.0, 1.0, 4.0, 1.5, 9.0, 2.6]
+    for q in (0, 10, 50, 90, 99, 100):
+        assert percentile(vals, q) == pytest.approx(
+            float(np.percentile(vals, q)))
+    assert math.isnan(percentile([], 50))
+
+
+def test_snapshot_is_json_round_trippable():
+    reg = MetricsRegistry()
+    reg.counter("c", a="1").inc(5)
+    reg.gauge("g").set(2.5)
+    reg.histogram("h").record(1.0)
+    snap = json.loads(reg.dumps())
+    assert snap["counters"] == {"c{a=1}": 5.0}
+    assert snap["gauges"] == {"g": 2.5}
+    assert snap["histograms"]["h"]["count"] == 1
+    assert len(reg) == 3
+    reg.clear()
+    assert len(reg) == 0
+
+
+# --------------------------------------------------------------------------
+# engine telemetry + trace export
+# --------------------------------------------------------------------------
+
+def _served_engine(metrics=None, tracer=None, lengths=(5, 9, 17), max_new=4):
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=2, max_len=32,
+                      metrics=metrics, tracer=tracer)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, n,
+                                               dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i, n in enumerate(lengths)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=200)
+    assert all(r.done for r in reqs)
+    return cfg, eng, reqs
+
+
+def test_engine_populates_serving_metrics():
+    reg = MetricsRegistry()
+    cfg, eng, reqs = _served_engine(metrics=reg)
+    snap = reg.snapshot()
+    assert reg.value("serve.prefill.tokens") == 5 + 9 + 17
+    assert reg.value("serve.prefill.calls", path="bucketed") >= 1
+    # every request's decode tokens were counted (prefill token excluded)
+    decoded = sum(len(r.out) - 1 for r in reqs)
+    assert reg.value("serve.decode.tokens") == decoded
+    assert reg.value("serve.decode.chunks") >= 1
+    assert reg.value("serve.queue_depth") == 0          # drained
+    assert 0 < snap["gauges"]["serve.slot_occupancy"] <= 1.0
+    assert snap["histograms"]["serve.decode.token_wait_us"]["count"] \
+        == decoded
+    assert snap["histograms"]["serve.decode.chunk_len"]["count"] \
+        == reg.value("serve.decode.chunks")
+    assert reg.value("serve.decode.tok_s") > 0
+    assert reg.value("serve.prefill.seconds") > 0
+    assert reg.value("serve.decode.seconds") > 0
+
+
+def test_engine_emits_spans_and_valid_chrome_trace(tmp_path):
+    rec = ServeTraceRecorder()
+    _, eng, _ = _served_engine(tracer=rec)
+    assert rec.spans, "engine emitted no spans"
+    cats = {s.cat for s in rec.spans}
+    assert cats == {"prefill", "decode"}
+    assert rec.phase_seconds("prefill") > 0
+    assert rec.phase_seconds("decode") > 0
+    # decode spans carry the device-side accumulators in their args
+    dspans = [s for s in rec.spans if s.cat == "decode"]
+    assert sum(s.args["tokens"] for s in dspans) \
+        == rec.phase_tokens("decode")
+
+    out = tmp_path / "trace.json"
+    n = write_chrome_trace(str(out), rec.spans)
+    assert n == len(rec.spans)
+    doc = json.loads(out.read_text())
+    assert isinstance(doc["traceEvents"], list)
+    assert doc["displayTimeUnit"] == "ms"
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    complete = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert {e["args"]["name"] for e in meta} >= {"sosa-serve", "prefill",
+                                                "decode"}
+    assert len(complete) == len(rec.spans)
+    for e in complete:
+        assert e["ts"] >= 0 and e["dur"] >= 0          # rebased to t=0
+        assert {"name", "cat", "pid", "tid", "args"} <= set(e)
+    # phase tracks: distinct tid per category
+    tids = {e["cat"]: e["tid"] for e in complete}
+    assert tids["prefill"] != tids["decode"]
+    # chronological within the engine's step-locked order
+    ts = [e["ts"] for e in complete]
+    assert min(ts) == 0.0
+
+
+def test_to_chrome_trace_empty_spans():
+    doc = to_chrome_trace([])
+    assert doc["traceEvents"][0]["args"]["name"] == "sosa-serve"
+    assert all(e["ph"] == "M" for e in doc["traceEvents"])
+
+
+def test_span_end_property():
+    s = Span(name="x", ts=1.5, dur=0.25)
+    assert s.end == 1.75
+
+
+# --------------------------------------------------------------------------
+# kernel autotune metrics
+# --------------------------------------------------------------------------
+
+def test_choose_blocks_records_autotune_metrics():
+    from repro.parallel.autoshard import choose_blocks, tile_utilization
+    reg = registry()
+    shape = (7777, 4096, 4096)                   # unique -> guaranteed miss
+    choose_blocks.cache_clear()
+    before_miss = reg.value("autotune.cache", result="miss") or 0
+    before_hit = reg.value("autotune.cache", result="hit") or 0
+    blocks = choose_blocks(*shape)
+    assert (reg.value("autotune.cache", result="miss") or 0) \
+        == before_miss + 1
+    choose_blocks(*shape)
+    assert (reg.value("autotune.cache", result="hit") or 0) \
+        == before_hit + 1
+    util = reg.value("autotune.tile_util",
+                     shape="x".join(str(d) for d in shape))
+    assert util is not None
+    assert 0 < util <= 1.0
+    assert util == pytest.approx(tile_utilization(*shape, blocks=blocks))
+
+
+def test_tile_utilization_penalizes_padding():
+    from repro.parallel.autoshard import tile_utilization
+    # aligned shape wastes nothing; a ragged M pays padded-MAC overhead
+    full = tile_utilization(4096, 4096, 4096, blocks=(256, 256, 256))
+    ragged = tile_utilization(100, 4096, 4096, blocks=(256, 256, 256))
+    assert full == pytest.approx(1.0)
+    assert ragged < full
+
+
+# --------------------------------------------------------------------------
+# drift + effective TOPS (the acceptance gates)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_run():
+    reg = MetricsRegistry()
+    rec = ServeTraceRecorder()
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=4, max_len=64,
+                      metrics=reg, tracer=rec)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, n,
+                                               dtype=np.int32),
+                    max_new_tokens=6)
+            for i, n in enumerate((5, 9, 17, 12, 33, 7))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=300)
+    assert all(r.done for r in reqs)
+    return cfg, reg, rec
+
+
+def test_drift_rows_per_phase_inside_calibrated_band(traced_run):
+    """The tentpole gate: one drift row per serving phase, and predicted
+    (wave model) utilization over measured (slice-accurate) utilization on
+    the engine's real recorded timeline stays inside the calibrated
+    parity band."""
+    cfg, reg, rec = traced_run
+    rows = drift_report(rec, cfg, metrics=reg, max_events_per_phase=16)
+    assert {r.phase for r in rows} == {"prefill", "decode"}
+    lo, hi = DRIFT_BAND
+    for r in rows:
+        assert r.events > 0 and r.gemms > 0
+        assert 0 < r.measured_utilization <= 1.0
+        assert 0 < r.predicted_utilization <= 1.0
+        assert lo <= r.drift <= hi, \
+            f"{r.phase}: drift {r.drift:.3f} outside [{lo}, {hi}]"
+        assert r.predicted_cycles > 0 and r.measured_cycles > 0
+        # the gauge mirror the benchmark suite reads
+        assert reg.value("obs.drift", phase=r.phase) \
+            == pytest.approx(r.drift)
+        assert reg.value("obs.predicted_util", phase=r.phase) \
+            == pytest.approx(r.predicted_utilization)
+
+
+def test_drift_skips_unrecorded_phases():
+    rec = ServeTraceRecorder()
+    rec.on_prefill(0, 8)
+    cfg = reduced(get_arch("granite-8b"))
+    rows = drift_report(rec, cfg, metrics=MetricsRegistry())
+    assert [r.phase for r in rows] == ["prefill"]
+
+
+def test_effective_tops_gauge_live(traced_run):
+    """Effective TOPS as the paper defines it — measured throughput x
+    utilization — computed from live telemetry and recorded as a gauge."""
+    cfg, reg, rec = traced_run
+    kreg = MetricsRegistry()
+    from repro.parallel.autoshard import choose_blocks as cb, \
+        tile_utilization
+    blocks = cb(64, cfg.d_model, cfg.d_ff)
+    kreg.gauge("autotune.tile_util",
+               shape=f"64x{cfg.d_model}x{cfg.d_ff}").set(
+        tile_utilization(64, cfg.d_model, cfg.d_ff, blocks))
+    rows = effective_tops_summary(rec, cfg, reg, kernel_metrics=kreg)
+    assert {r.phase for r in rows} == {"prefill", "decode"}
+    for r in rows:
+        assert r.tokens == rec.phase_tokens(r.phase)
+        assert r.seconds == pytest.approx(
+            reg.value(f"serve.{r.phase}.seconds"))
+        assert r.tok_s > 0 and r.macs_per_token > 0
+        assert 0 < r.tile_utilization <= 1.0
+        # effective = measured x utilization, by construction and as gauge
+        assert r.effective_tops == pytest.approx(
+            r.measured_tops * r.tile_utilization)
+        assert reg.value("obs.effective_tops", phase=r.phase) \
+            == pytest.approx(r.effective_tops)
+
+
+def test_effective_tops_unit_utilization_without_kernel_gauges(traced_run):
+    cfg, reg, rec = traced_run
+    rows = effective_tops_summary(rec, cfg, reg,
+                                  kernel_metrics=MetricsRegistry())
+    for r in rows:
+        assert r.tile_utilization == 1.0
+        assert r.effective_tops == pytest.approx(r.measured_tops)

@@ -351,6 +351,63 @@ def test_choose_blocks_memory_bound_prefers_wide_n():
 
 
 # --------------------------------------------------------------------------
+# telemetry must be free: no compiles, no syncs, no token changes
+# --------------------------------------------------------------------------
+
+class _SyncCountingNumpy:
+    """numpy proxy that counts device->host materializations (np.asarray
+    on a jax.Array) — the engine's host-sync accounting unit."""
+
+    def __init__(self, real):
+        self._real = real
+        self.syncs = 0
+
+    def asarray(self, x, *a, **k):
+        if isinstance(x, jax.Array):
+            self.syncs += 1
+        return self._real.asarray(x, *a, **k)
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+def test_metrics_and_tracer_add_no_compiles_or_syncs(monkeypatch):
+    """The zero-overhead gate: an engine with a metrics registry and a
+    span-recording tracer must produce the same tokens with the same jit
+    cache sizes and the same number of host syncs as a bare engine — the
+    device-side telemetry accumulators ride the existing chunk sync."""
+    import repro.serve.engine as engine_mod
+    from repro.obs.metrics import MetricsRegistry
+    from repro.tenancy.trace import ServeTraceRecorder
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 9, 17, 12, 33, 7)]
+
+    counts = {}
+    outs = {}
+    for name, kw in (("bare", {}),
+                     ("instrumented", {"metrics": MetricsRegistry(),
+                                       "tracer": ServeTraceRecorder()})):
+        proxy = _SyncCountingNumpy(np)
+        monkeypatch.setattr(engine_mod, "np", proxy)
+        eng, out = _run(ServeEngine, model, params, prompts, max_new=5,
+                        slots=2, max_len=64, decode_chunk=8, **kw)
+        monkeypatch.setattr(engine_mod, "np", np)
+        counts[name] = (eng._prefill_fn._cache_size(),
+                        eng._decode_fn._cache_size(), proxy.syncs)
+        outs[name] = out
+    assert outs["instrumented"] == outs["bare"]
+    assert counts["instrumented"] == counts["bare"], (
+        "telemetry changed (prefill compiles, decode compiles, host syncs):"
+        f" {counts}")
+    # and the host genuinely synced once per device call, not per token
+    eng_steps = sum(1 for _ in outs["bare"])           # lanes, not steps
+    assert counts["bare"][2] < sum(len(o) for o in outs["bare"].values())
+    assert eng_steps > 0
+
+
+# --------------------------------------------------------------------------
 # benchmark JSON schema (benchmarks/run.py --json)
 # --------------------------------------------------------------------------
 
@@ -377,3 +434,72 @@ def test_bench_json_schema(tmp_path):
     assert doc["rows"][1]["suite"] == "kernels"
     assert {"suite", "name", "us_per_call", "derived"} <= set(
         doc["rows"][0])
+
+
+def test_parse_row_keeps_commas_in_derived():
+    """`derived` is everything past the second comma, verbatim — error
+    messages (and future derived values) containing commas must survive
+    the CSV round trip."""
+    run = _load_bench_run()
+    row = run.parse_row(
+        "serving/ERROR,0,error_type=ValueError;"
+        "error_msg=bad shapes (4, 8), expected (8, 4)")
+    assert row["suite"] == "serving"
+    assert row["us_per_call"] == 0.0
+    assert row["derived"] == ("error_type=ValueError;"
+                              "error_msg=bad shapes (4, 8), expected (8, 4)")
+
+
+def test_error_row_carries_exception_type_and_message():
+    run = _load_bench_run()
+    try:
+        raise RuntimeError("jit cache blew\n  past the,bound")
+    except RuntimeError as e:
+        line = run.error_row("serving", e)
+    row = run.parse_row(line)
+    assert row["name"] == "serving/ERROR"
+    # type and message are greppable key=value fields; newlines flattened,
+    # commas intact
+    assert "error_type=RuntimeError" in row["derived"]
+    assert "error_msg=jit cache blew past the,bound" in row["derived"]
+    # empty-message exceptions still say something
+    assert "error_msg=<no message>" in run.error_row("x", ValueError())
+
+
+def test_validate_doc_catches_malformed_records():
+    run = _load_bench_run()
+    good = {"schema": "sosa-bench-v1", "created_unix": 1e9,
+            "argv": ["--json", "x"],
+            "rows": [{"suite": "s", "name": "s/a", "us_per_call": 1.0,
+                      "derived": "d"},
+                     {"suite": "s", "name": "s/_total", "us_per_call": 2.0,
+                      "derived": "done"}]}
+    assert run.validate_doc(good) == []
+    assert run.validate_doc({"schema": "wrong"})       # missing everything
+    bad_suite = json.loads(json.dumps(good))
+    bad_suite["rows"][0]["name"] = "other/a"           # name != suite
+    assert any("does not start with suite" in p
+               for p in run.validate_doc(bad_suite))
+    no_total = {**good, "rows": [good["rows"][0]]}
+    assert any("_total" in p for p in run.validate_doc(no_total))
+
+
+@pytest.mark.tier1
+def test_committed_bench_records_validate():
+    """Every BENCH_*.json committed at the repo root must parse against
+    the sosa-bench-v1 schema (at least one must exist — the perf
+    trajectory record this repo keeps across PRs)."""
+    import glob
+    run = _load_bench_run()
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    assert paths, "no BENCH_*.json committed at the repo root"
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        problems = run.validate_doc(doc)
+        assert problems == [], f"{os.path.basename(path)}: {problems}"
+        # a committed record must be a clean run: no ERROR rows
+        errors = [r["name"] for r in doc["rows"]
+                  if r["name"].endswith("/ERROR")]
+        assert errors == [], f"{os.path.basename(path)}: {errors}"

@@ -311,6 +311,29 @@ def test_trace_tenant_rejects_empty_recorder():
                      reduced(get_arch("granite-8b")))
 
 
+def test_trace_tenant_error_names_kwarg_and_missing_phase():
+    """The empty-trace error must tell the user HOW to fix it (the
+    `tracer` engine kwarg) and WHICH phase is missing."""
+    from repro.configs import get_arch, reduced
+    cfg = reduced(get_arch("granite-8b"))
+    with pytest.raises(ValueError) as ei:
+        trace_tenant("svc", ServeTraceRecorder(), cfg)
+    msg = str(ei.value)
+    assert "'svc'" in msg
+    assert "tracer" in msg and "ServeEngine" in msg
+    assert "prefill/decode" in msg            # both phases missing
+    assert "none" in msg                      # nothing recorded at all
+
+    # a prefill-only trace asked for decode events names just the gap
+    rec = ServeTraceRecorder()
+    rec.on_prefill(0, 8)
+    with pytest.raises(ValueError) as ei:
+        trace_tenant("svc", rec, cfg, kinds=("decode",))
+    msg = str(ei.value)
+    assert "no decode events" in msg
+    assert "prefill" in msg                   # what WAS recorded, listed
+
+
 # --------------------------------------------------------------------------
 # mix construction invariants
 # --------------------------------------------------------------------------
