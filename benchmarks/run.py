@@ -125,6 +125,29 @@ def write_json(rows: list[dict], path: str) -> None:
         f.write("\n")
 
 
+def load_suites() -> dict:
+    """The suite registry, resolved at call time (suites consult
+    ``benchmarks._check.check_mode()`` at import, so --check must set the
+    env var first). A separate hook so the --check regression test can
+    substitute a failing suite and assert the nonzero exit."""
+    from benchmarks import (dse_map, granularity, interconnect, kernels_bench,
+                            memory_sweep, multitenancy, obs, scaling, serving,
+                            tenancy, tiling_sweep)
+    return {
+        "granularity": granularity.bench,       # Table 2 + Fig 9
+        "interconnect": interconnect.bench,     # Table 1 + Fig 12a
+        "tiling": tiling_sweep.bench,           # Fig 12b
+        "dse": dse_map.bench,                   # Fig 5
+        "multitenancy": multitenancy.bench,     # Fig 11
+        "tenancy": tenancy.bench,               # tenant-mix DSE (repro.tenancy)
+        "memory": memory_sweep.bench,           # Fig 13
+        "scaling": scaling.bench,               # Fig 10
+        "kernels": kernels_bench.bench,         # §4.1 pod microarchitecture
+        "serving": serving.bench,               # hot-loop engine vs seed
+        "obs": obs.bench,                       # telemetry: eff-TOPS, drift
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
@@ -142,22 +165,7 @@ def main() -> None:
         import os
         os.environ["SOSA_BENCH_CHECK"] = "1"
 
-    from benchmarks import (dse_map, granularity, interconnect, kernels_bench,
-                            memory_sweep, multitenancy, obs, scaling, serving,
-                            tenancy, tiling_sweep)
-    suites = {
-        "granularity": granularity.bench,       # Table 2 + Fig 9
-        "interconnect": interconnect.bench,     # Table 1 + Fig 12a
-        "tiling": tiling_sweep.bench,           # Fig 12b
-        "dse": dse_map.bench,                   # Fig 5
-        "multitenancy": multitenancy.bench,     # Fig 11
-        "tenancy": tenancy.bench,               # tenant-mix DSE (repro.tenancy)
-        "memory": memory_sweep.bench,           # Fig 13
-        "scaling": scaling.bench,               # Fig 10
-        "kernels": kernels_bench.bench,         # §4.1 pod microarchitecture
-        "serving": serving.bench,               # hot-loop engine vs seed
-        "obs": obs.bench,                       # telemetry: eff-TOPS, drift
-    }
+    suites = load_suites()
     only = set(args.only.split(",")) if args.only else None
     selected = [n for n in suites if not only or n in only]
     rows: list[dict] = []

@@ -20,6 +20,14 @@ Three phases, each reported as `serving/...` rows:
   * autotune — the DSE block geometry choose_blocks picks for the
     full-scale fused decode GEMM shapes (pure model, no timing), incl.
     the transposed-weight LM-head and grouped MoE expert shapes.
+  * admission — overload & failure semantics (serve/admission.py,
+    serve/chaos.py): a fifo-overhead row (the admission-threaded engine
+    on the steady-state decode workload — must hold the PR 7 decode
+    rate), per-policy shed/goodput/SLO-attainment rows under a
+    deterministic 2x-overload workload driven in *virtual time*
+    (VirtualClock + seeded per-call service times, so the counts are
+    exact and box-independent), and a seeded chaos row (transient faults
+    + slow chunks: retries, sheds, slot-leak check).
 """
 
 from __future__ import annotations
@@ -228,10 +236,129 @@ def _autotune_phase(lines):
     return lines
 
 
+def _admission_phase(lines):
+    """Overload & failure semantics rows (serve/admission.py, chaos.py).
+
+    The overload rows run in VIRTUAL time: a VirtualClock the injector
+    advances by a fixed service_seconds per device call. Deadline expiry,
+    predictive shedding, and budget degradation then depend only on the
+    (seeded) workload — the done/expired/rejected counts and attainment
+    are exact integers on any box. The fifo-overhead row is real wall
+    clock (warm + min-of-2), pinning the admission-threaded default
+    engine to the PR 7 steady-state decode rate."""
+    from repro.serve.admission import AdmissionConfig
+    from repro.serve.chaos import ChaosConfig, VirtualClock
+    from repro.serve.engine import Request, ServeEngine
+    cfg, model, params = _mk_engine_parts()
+
+    # fifo overhead: steady-state decode, default (seed-equivalent) engine
+    max_new = pick(33, 5)
+    lengths = [8, 8, 8, 8]
+
+    def decode_run():
+        eng = ServeEngine(model, params, slots=4, max_len=64,
+                          decode_chunk=16)
+        reqs = _reset_requests(cfg, lengths, np.random.default_rng(0),
+                               max_new)
+        for r in reqs:
+            eng.submit(r)
+        eng._admit()
+        t0 = time.perf_counter()
+        while any(eng.active):
+            eng.step()
+        dt = time.perf_counter() - t0
+        assert all(r.done and r.state == "done" for r in reqs)
+        return dt
+
+    decode_run()                                     # warm (compile)
+    dt = min(decode_run(), decode_run())
+    toks = 4 * (max_new - 1)
+    lines.append(f"serving/admission_fifo_overhead,{dt / toks * 1e6:.0f},"
+                 f"tok_s={toks / dt:.0f};policy=fifo")
+
+    # deterministic 2x-overload policy comparison (virtual time)
+    n_req = pick(16, 6)
+    over_new = pick(8, 3)
+    service = 0.05
+
+    def mk_reqs(tight, loose):
+        rng = np.random.default_rng(11)
+        reqs = []
+        for i in range(n_req):
+            p = rng.integers(0, cfg.vocab, int(rng.integers(5, 9)),
+                             dtype=np.int32)
+            reqs.append(Request(rid=i, prompt=p, max_new_tokens=over_new,
+                                deadline_s=tight if i % 2 else loose))
+        return reqs
+
+    def overload_run(policy, tight=None, loose=None):
+        clk = VirtualClock()
+        eng = ServeEngine(
+            model, params, slots=2, max_len=64, decode_chunk=8, clock=clk,
+            admission=AdmissionConfig(policy=policy),
+            chaos=ChaosConfig(seed=0, service_seconds=service))
+        reqs = mk_reqs(tight, loose)
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion(max_steps=2000)
+        if any(eng.active):
+            raise RuntimeError(f"slot leak under {policy}")
+        done_toks = sum(len(r.out) for r in reqs if r.state == "done")
+        return eng, reqs, clk.t, done_toks
+
+    # calibrate the deadline scale: total virtual time with no deadlines
+    _, _, t_full, _ = overload_run("fifo")
+    tight, loose = 0.35 * t_full, 3.0 * t_full
+    att = {}
+    for policy in ("fifo", "edf", "slo-aware"):
+        eng, reqs, t, done_toks = overload_run(policy, tight, loose)
+        c = eng.admission.counts
+        att[policy] = eng.admission.slo_attainment
+        lines.append(
+            f"serving/admission_overload_{policy.replace('-', '_')},0,"
+            f"slo_attainment={att[policy]:.3f};done={c['done']};"
+            f"expired={c['expired']};rejected={c['rejected']};"
+            f"degraded={c['degraded']};goodput_tok_per_vs={done_toks / t:.1f};"
+            f"virtual_s={t:.2f};offered={n_req}")
+    if att["edf"] <= att["fifo"] or att["slo-aware"] <= att["fifo"]:
+        raise RuntimeError(
+            f"deadline policies must beat fifo attainment under overload: "
+            f"{att}")
+    lines.append(
+        f"serving/admission_policy_gain,0,"
+        f"edf_minus_fifo={att['edf'] - att['fifo']:.3f};"
+        f"slo_aware_minus_fifo={att['slo-aware'] - att['fifo']:.3f}")
+
+    # seeded chaos: transient faults + slow chunks through the retry path
+    clk = VirtualClock()
+    eng = ServeEngine(
+        model, params, slots=2, max_len=64, clock=clk,
+        admission=AdmissionConfig(policy="edf"),
+        chaos=ChaosConfig(seed=3, p_fault=0.3, p_slow=0.3,
+                          service_seconds=0.01, transient_tries=1))
+    reqs = mk_reqs(None, None)[: pick(8, 4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=2000)
+    leaks = sum(1 for r in eng.active if r is not None)
+    if leaks or any(not r.finished for r in reqs):
+        raise RuntimeError(f"chaos run leaked slots ({leaks}) or left "
+                           f"non-terminal requests")
+    c = eng.admission.counts
+    inj = eng._chaos.injected
+    lines.append(
+        f"serving/admission_chaos,0,"
+        f"injected_faults={inj['faults']};injected_slow={inj['slow']};"
+        f"device_calls={inj['calls']};done={c['done']};"
+        f"rejected={c['rejected']};expired={c['expired']};slot_leaks=0")
+    return lines
+
+
 def bench() -> list[str]:
     lines: list[str] = []
     _prefill_phase(lines)
     _decode_phase(lines)
     _family_phase(lines)
     _autotune_phase(lines)
+    _admission_phase(lines)
     return lines

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# The documented fast gate (see pyproject.toml / ROADMAP.md), one command:
+#
+#   scripts/fastgate.sh            # not-slow tests + benchmark --check smoke
+#   scripts/fastgate.sh --tier1    # quickest signal: tier1 marker only
+#
+# Exits nonzero if either the test subset or the benchmark smoke fails
+# (benchmarks.run --check asserts every suite emits its _total row and no
+# ERROR rows). The full tier-1 verify (slow parity matrix included) stays
+#   PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+marker="not slow"
+if [[ "${1:-}" == "--tier1" ]]; then
+    marker="tier1"
+    shift
+fi
+
+PYTHONPATH=src python -m pytest -q -m "$marker" "$@"
+PYTHONPATH=src python -m benchmarks.run --check

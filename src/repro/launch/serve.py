@@ -7,6 +7,13 @@
 `--metrics` prints the engine's telemetry snapshot (obs.metrics) after the
 run; `--trace-out PATH` writes the run as Chrome trace-event JSON —
 drag-and-drop it into ui.perfetto.dev or chrome://tracing.
+
+Overload & failure knobs (serve/admission.py, serve/chaos.py):
+`--policy {fifo,edf,slo-aware}` selects the admission policy, `--deadline
+SECONDS` stamps every generated request with that deadline, `--max-queue N`
+bounds the queue (backpressure: over-budget submissions are shed with
+`Request.state == "rejected"`), and `--chaos-*` arm the seeded fault
+injector so the retry/shedding machinery is observable from the CLI.
 """
 
 from __future__ import annotations
@@ -19,6 +26,8 @@ import numpy as np
 
 from repro.configs import get_arch, reduced as reduce_cfg
 from repro.models.model import Model
+from repro.serve.admission import AdmissionConfig, POLICIES
+from repro.serve.chaos import ChaosConfig
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -34,6 +43,18 @@ def main():
                     help="print the obs.metrics snapshot after the run")
     ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
                     help="write the run as Perfetto/Chrome trace JSON")
+    ap.add_argument("--policy", choices=POLICIES, default="fifo",
+                    help="admission policy (serve/admission.py)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request deadline in seconds from submit")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bounded queue: shed submissions beyond N queued")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="arm the fault injector with this seed")
+    ap.add_argument("--chaos-fault-p", type=float, default=0.1,
+                    help="per-call transient-fault probability")
+    ap.add_argument("--chaos-slow-p", type=float, default=0.1,
+                    help="per-call slow-chunk probability")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -48,9 +69,16 @@ def main():
     if args.trace_out:
         from repro.tenancy.trace import ServeTraceRecorder
         tracer = ServeTraceRecorder()
+    chaos = None
+    if args.chaos_seed is not None:
+        chaos = ChaosConfig(seed=args.chaos_seed,
+                            p_fault=args.chaos_fault_p,
+                            p_slow=args.chaos_slow_p)
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.max_len, metrics=metrics,
-                         tracer=tracer)
+                         tracer=tracer, chaos=chaos,
+                         admission=AdmissionConfig(
+                             policy=args.policy, max_queue=args.max_queue))
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -58,7 +86,8 @@ def main():
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, rng.integers(4, 24),
                               dtype=np.int32)
-        r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new)
+        r = Request(rid=i, prompt=prompt, max_new_tokens=args.max_new,
+                    deadline_s=args.deadline)
         reqs.append(r)
         engine.submit(r)
     steps = 0
@@ -68,10 +97,16 @@ def main():
     dt = time.time() - t0
     total_new = sum(len(r.out) for r in reqs)
     for r in reqs:
-        print(f"req {r.rid}: prompt_len={len(r.prompt)} -> {r.out}")
+        tail = "" if r.state == "done" else \
+            f"  [{r.state}{': ' + r.reason if r.reason else ''}]"
+        print(f"req {r.rid}: prompt_len={len(r.prompt)} -> {r.out}{tail}")
     print(f"{args.requests} requests, {total_new} tokens, {steps} engine "
           f"steps, {dt:.1f}s ({1000 * dt / max(1, total_new):.0f} ms/tok "
           f"on CPU)")
+    c = engine.admission.counts
+    if c["rejected"] or c["expired"] or args.deadline is not None:
+        print(f"admission[{args.policy}]: {c}; "
+              f"slo_attainment={engine.admission.slo_attainment:.2f}")
     if metrics is not None:
         print("metrics snapshot:")
         print(metrics.dumps(indent=1))

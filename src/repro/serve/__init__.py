@@ -1,2 +1,7 @@
+from .admission import (AdmissionConfig, AdmissionController, EDF, FIFO,
+                        InvalidRequest, POLICIES, SLO_AWARE, ServeStalled,
+                        TERMINAL_STATES, WaveLatencyPredictor)
+from .chaos import (ChaosConfig, FaultInjector, PermanentFault,
+                    SlowChunkDetector, TransientDeviceError, VirtualClock)
 from .engine import Request, ServeEngine
 from .reference import ReferenceEngine

@@ -38,6 +38,22 @@ pod GEMM, kernels/systolic_gemm). Pass
 prefill/decode timeline; events are emitted in the same step-locked order
 as the seed engine (decode events are reconstructed per scan step from the
 chunk's emit masks), so `tenancy/trace.py` lowers them unchanged.
+
+Overload & failure semantics (serve/admission.py, serve/chaos.py): every
+submitted request reaches exactly one terminal state — ``done`` |
+``rejected`` | ``expired`` — and malformed requests raise
+`InvalidRequest` at submit. `admission=` selects the policy (fifo | edf |
+slo-aware: deadline ordering, bounded-queue backpressure, wave-model
+predictive shedding, overload budget degradation); deadline expiry runs
+at the existing per-chunk host sync (zero new syncs). `chaos=` injects a
+seeded fault schedule at the device-call boundary: transient faults
+retry with exponential backoff (`max_retries`, `backoff_s`) before the
+affected requests are rejected with their slots reclaimed, and an EWMA
+slow-chunk detector (train/fault.py machinery) halves the next chunk
+while the device is degraded. With the defaults (fifo, unbounded, no
+chaos, no deadlines) the hot loop is bit-identical to the seed: same
+tokens, same jit cache sizes, same host-sync count (gated in
+tests/test_serving.py and tests/test_admission.py).
 """
 
 from __future__ import annotations
@@ -54,6 +70,11 @@ import numpy as np
 from ..models.attention import KVCache
 from ..models.model import Model
 from ..models.transformer import MLACache
+from ..train.fault import Ewma
+from .admission import (AdmissionConfig, AdmissionController, NEW,
+                        SLO_AWARE, ServeStalled, WaveLatencyPredictor)
+from .chaos import (FaultInjector, PermanentFault, SlowChunkDetector,
+                    TransientDeviceError)
 
 
 @dataclasses.dataclass
@@ -68,6 +89,23 @@ class Request:
     # requests with extras always prefill exact-length (per-request shapes
     # can't join a shared bucket batch)
     extras: dict = dataclasses.field(default_factory=dict)
+    # QoS envelope (serve/admission.py): deadline is seconds from submit
+    # on the engine's clock; priority breaks deadline ties (lower = more
+    # urgent). state walks new -> queued -> running -> one terminal state
+    # (done | rejected | expired); reason says why a request was shed.
+    deadline_s: Optional[float] = None
+    priority: int = 0
+    state: str = NEW
+    reason: str = ""
+    # stamped by the admission controller
+    _seq: int = dataclasses.field(default=0, repr=False)
+    _submit_t: float = dataclasses.field(default=0.0, repr=False)
+    _admit_t: float = dataclasses.field(default=0.0, repr=False)
+    _deadline: Optional[float] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def finished(self) -> bool:
+        return self.state in ("done", "rejected", "expired")
 
 
 class ServeEngine:
@@ -75,7 +113,9 @@ class ServeEngine:
                  max_len: int = 512, src_len: int = 0,
                  eos_id: Optional[int] = None, tracer=None,
                  decode_chunk: int = 8, prefill_buckets: bool = True,
-                 min_bucket: int = 8, metrics=None):
+                 min_bucket: int = 8, metrics=None, admission=None,
+                 chaos=None, clock=None, max_retries: int = 3,
+                 backoff_s: float = 1e-3):
         self.model = model
         self.params = params
         self.slots = slots
@@ -106,7 +146,81 @@ class ServeEngine:
         self._prefill_fn = jax.jit(self._prefill_batched_impl)
         self._decode_fn = jax.jit(self._decode_chunk_impl,
                                   static_argnames=("n",))
-        self._t0 = time.perf_counter()
+        # injectable clock (serve/chaos.VirtualClock in tests/benchmarks);
+        # everything time-dependent — spans, deadlines, backoff, EWMAs —
+        # reads it, so failure scenarios replay deterministically
+        self._clock = clock if clock is not None else time.perf_counter
+        # admission policy: None/str/AdmissionConfig -> controller. The
+        # default AdmissionConfig() is the seed engine exactly (fifo,
+        # unbounded queue, no deadlines => no controller interference).
+        if admission is None:
+            admission = AdmissionConfig()
+        elif isinstance(admission, str):
+            admission = AdmissionConfig(policy=admission)
+        predictor = None
+        if isinstance(admission, AdmissionConfig):
+            if admission.policy == SLO_AWARE:
+                predictor = WaveLatencyPredictor(
+                    model.cfg, admission.design, admission.tdp)
+            admission = AdmissionController(
+                admission, slots=slots, max_len=max_len,
+                predictor=predictor, metrics=metrics)
+        self.admission: AdmissionController = admission
+        # chaos: a ChaosConfig arms the seeded fault injector plus the
+        # EWMA slow-chunk detector; None (default) leaves the hot loop
+        # untouched (no per-call hooks at all)
+        if chaos is not None and not isinstance(chaos, FaultInjector):
+            chaos = FaultInjector(chaos, clock=clock)
+        self._chaos: Optional[FaultInjector] = chaos
+        self._slow_detect = SlowChunkDetector() if chaos is not None \
+            else None
+        self._chunk_cap: Optional[int] = None
+        self.max_retries = max(0, int(max_retries))
+        self.backoff_s = float(backoff_s)
+        # measured decode seconds/token (host floats, always cheap): the
+        # deadline-aware chunk capping below sizes chunks with it
+        self._sec_per_tok = Ewma(alpha=0.3)
+        self._t0 = self._clock()
+
+    # -- fault boundary -------------------------------------------------
+    def _sleep(self, seconds: float) -> None:
+        if seconds <= 0:
+            return
+        if hasattr(self._clock, "sleep"):
+            self._clock.sleep(seconds)        # virtual time: no blocking
+        else:
+            time.sleep(seconds)
+
+    def _device_call(self, kind: str, fn):
+        """Run one device call through the fault boundary: the chaos
+        injector may stall or raise per its seeded schedule; transient
+        errors retry with exponential backoff up to `max_retries`, then
+        escalate to PermanentFault. Results are returned (never assigned
+        to engine state here), so a failed call leaves cache/lanes exactly
+        as they were. With chaos disarmed this is a plain call."""
+        if self._chaos is None:
+            return fn()
+        attempt = 0
+        while True:
+            try:
+                self._chaos.before(kind)
+                return fn()
+            except TransientDeviceError as err:
+                attempt += 1
+                if self.metrics is not None:
+                    self.metrics.counter("serve.chaos.retries",
+                                         kind=kind).inc()
+                if attempt > self.max_retries:
+                    raise PermanentFault(
+                        f"{kind} device call failed after {attempt} "
+                        f"attempts: {err}") from err
+                self._sleep(self.backoff_s * (2 ** (attempt - 1)))
+
+    def _reject_group(self, reqs: list, reason: str) -> None:
+        for r in reqs:
+            self.admission.reject(r, reason)
+        if self.metrics is not None:
+            self.metrics.counter("serve.chaos.permanent_faults").inc()
 
     # -- telemetry ------------------------------------------------------
     def _span(self, name: str, cat: str, t_start: float, t_end: float,
@@ -154,7 +268,12 @@ class ServeEngine:
 
     # -- request flow --------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        """Validate + enqueue. Raises InvalidRequest (typed, names the
+        offending field) for malformed requests; under a bounded queue the
+        admission policy may shed (request ends ``rejected``, reason
+        ``queue-full`` / ``shed-predicted-miss``) instead of enqueueing."""
+        if self.admission.on_submit(self.queue, req, self._clock()):
+            self.queue.append(req)
         if self.metrics is not None:
             self.metrics.gauge("serve.queue_depth").set(len(self.queue))
 
@@ -167,6 +286,10 @@ class ServeEngine:
         return min(b, self.max_len)
 
     def _admit(self) -> None:
+        # queue sweep first: expire queued-past-deadline, shed predicted
+        # misses (slo-aware), and order the queue per policy. Pure host
+        # work; a fifo queue with no deadlines passes through untouched.
+        self.admission.sweep(self.queue, self._clock())
         while self.queue:
             free = self._free_slots()
             if not free:
@@ -216,15 +339,25 @@ class ServeEngine:
             toks[g, :S] = r.prompt
             true_lens[g] = S
             slot_ids[g] = s
-            if self.tracer is not None:
-                self.tracer.on_prefill(r.rid, S)
         self._buckets_seen.add(bucket)
-        t_start = time.perf_counter()
-        first, self.cache = self._prefill_fn(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(slot_ids), jnp.asarray(true_lens))
+        t_start = self._clock()
+        try:
+            first, cache = self._device_call(
+                "prefill", lambda: self._prefill_fn(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(slot_ids), jnp.asarray(true_lens)))
+        except PermanentFault:
+            # the whole group failed before any state was assigned: shed
+            # the requests (terminal `rejected`), slots stay free
+            self._reject_group(reqs, "device-fault")
+            return
+        self.cache = cache
         first = np.asarray(first)
-        t_end = time.perf_counter()
+        t_end = self._clock()
+        if self.tracer is not None:
+            for r in reqs:       # successful work only enters the trace
+                self.tracer.on_prefill(r.rid, len(r.prompt),
+                                       t=t_start - self._t0)
         n_tokens = int(sum(len(r.prompt) for r in reqs))
         self._span(f"prefill/bucket{bucket}", "prefill", t_start, t_end,
                    bucket=bucket, lanes=len(reqs), tokens=n_tokens,
@@ -235,7 +368,9 @@ class ServeEngine:
             r.out.append(int(first[g]))
             self.active[s] = r
             self.positions[s] = len(r.prompt)
-            self.budgets[s] = self._clamped_budget(r)
+            self.budgets[s] = self.admission.clamp_budget(
+                r, self._clamped_budget(r), len(self.queue))
+            self.admission.note_admitted(r, t_end)
             self._retire_if_full(s)
 
     def _prefill_batched_impl(self, params, tokens, big_cache, slot_ids,
@@ -280,26 +415,33 @@ class ServeEngine:
         encoder-decoder cross-KV lanes line up with the batched cache
         (regression: the seed dropped src_len here)."""
         S = len(req.prompt)
-        if self.tracer is not None:
-            self.tracer.on_prefill(req.rid, S)
         self._buckets_seen.add(S)     # exact-length path: one shape per len
-        t_start = time.perf_counter()
+        t_start = self._clock()
         lane_cache = self.model.init_cache(1, self.max_len,
                                            src_len=self.src_len)
         batch = {"tokens": jnp.asarray(req.prompt)[None, :]}
         for key, val in req.extras.items():
             batch[key] = jnp.asarray(val)
-        logits, lane_cache = self.model.prefill(self.params, batch,
-                                                lane_cache)
+        try:
+            logits, lane_cache = self._device_call(
+                "prefill",
+                lambda: self.model.prefill(self.params, batch, lane_cache))
+        except PermanentFault:
+            self._reject_group([req], "device-fault")
+            return
         self.cache = _write_lane(self.cache, lane_cache, slot)
         req.out.append(int(jnp.argmax(logits[0])))
-        t_end = time.perf_counter()
+        t_end = self._clock()
+        if self.tracer is not None:
+            self.tracer.on_prefill(req.rid, S, t=t_start - self._t0)
         self._span(f"prefill/exact{S}", "prefill", t_start, t_end,
                    bucket=S, lanes=1, tokens=S, rids=[req.rid])
         self._observe_prefill("exact", S, 1, t_end - t_start)
         self.active[slot] = req
         self.positions[slot] = S
-        self.budgets[slot] = self._clamped_budget(req)
+        self.budgets[slot] = self.admission.clamp_budget(
+            req, self._clamped_budget(req), len(self.queue))
+        self.admission.note_admitted(req, t_end)
         self._retire_if_full(slot)
 
     def _clamped_budget(self, req: Request) -> int:
@@ -316,7 +458,7 @@ class ServeEngine:
         prefill token instead of letting the append clobber the last KV
         slot."""
         if self.positions[slot] >= self.max_len:
-            self.active[slot].done = True
+            self.admission.finish(self.active[slot], now=self._clock())
             self.active[slot] = None
 
     # -- fused decode loop ------------------------------------------------
@@ -362,6 +504,24 @@ class ServeEngine:
         need = min(rem) if self.queue else max(rem)
         room = min(int(self.max_len - self.positions[i]) for i in live)
         n = max(1, min(self.decode_chunk, need, max(1, room)))
+        if self._chunk_cap is not None:
+            # slow-chunk mitigation (chaos armed + detector flagged):
+            # shorter chunks while the device is degraded, so deadline
+            # checks and admission come around sooner
+            n = min(n, self._chunk_cap)
+        deadlines = [self.active[i]._deadline for i in live
+                     if self.active[i]._deadline is not None]
+        spt = self._sec_per_tok.value
+        if deadlines and spt is not None and spt > 0:
+            # deadline-aware sizing: don't run a chunk so long the
+            # earliest-deadline lane blows through its deadline between
+            # host syncs. Only lanes with deadlines trigger this — the
+            # bare fifo path is untouched (same chunk sizes as the seed).
+            slack = min(deadlines) - self._clock()
+            if slack <= 0:
+                n = 1                 # sync asap; expiry reclaims the lane
+            else:
+                n = max(1, min(n, int(slack / spt)))
         # pow2 floor: <= log2(decode_chunk)+1 compiled chunk variants
         return 1 << (n.bit_length() - 1)
 
@@ -379,25 +539,50 @@ class ServeEngine:
             toks[i] = self.active[i].out[-1]
             alive0[i] = True
         pos0 = self.positions.copy()
-        t_start = time.perf_counter()
-        self.cache, seq, emits, stats = self._decode_fn(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos0),
-            jnp.asarray(self.budgets), jnp.asarray(alive0), n=n)
+        t_start = self._clock()
+        try:
+            cache, seq, emits, stats = self._device_call(
+                "decode", lambda: self._decode_fn(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos0), jnp.asarray(self.budgets),
+                    jnp.asarray(alive0), n=n))
+        except PermanentFault:
+            # the chunk never ran (the injector raises before launch):
+            # cache/positions are untouched. Shed the affected lanes and
+            # free their slots so queued work keeps flowing.
+            self._reject_group([self.active[i] for i in live],
+                               "device-fault")
+            for i in live:
+                self.active[i] = None
+            return len(live)
+        self.cache = cache
         seq = np.asarray(seq)                         # the ONE host sync
         emits = np.asarray(emits)
         stats = np.asarray(stats)     # device accumulators, already ready
-        t_end = time.perf_counter()
+        t_end = self._clock()
         self._span(f"decode/chunk{n}", "decode", t_start, t_end,
                    steps=n, lanes=len(live), tokens=int(stats[0]),
                    live_end=int(stats[1]))
         self._observe_decode(n, len(live), int(stats[0]), int(stats[1]),
                              t_end - t_start)
+        emitted = int(stats[0])
+        if emitted > 0 and t_end > t_start:
+            self._sec_per_tok.observe((t_end - t_start) / emitted)
+            if self._slow_detect is not None:
+                # EWMA slow-chunk detection (train/fault.py discipline):
+                # a flagged degradation halves the next chunk; a healthy
+                # chunk lifts the cap again
+                flagged = self._slow_detect.observe(
+                    (t_end - t_start) / emitted)
+                self._chunk_cap = max(1, n // 2) if flagged else None
         if self.tracer is not None:                   # step-locked replay
+            dt_step = (t_end - t_start) / n
             for s in range(n):
                 lanes = [i for i in live if emits[s, i]]
                 if lanes:
                     self.tracer.on_decode(
-                        len(lanes), [int(pos0[i]) + s for i in lanes])
+                        len(lanes), [int(pos0[i]) + s for i in lanes],
+                        t=(t_start - self._t0) + s * dt_step)
         for i in live:
             r = self.active[i]
             cnt = int(emits[:, i].sum())
@@ -407,15 +592,37 @@ class ServeEngine:
             hit_eos = (self.eos_id is not None and cnt > 0
                        and int(seq[cnt - 1, i]) == self.eos_id)
             if self.budgets[i] <= 0 or hit_eos:
-                r.done = True
+                if self.admission.predictor is not None:
+                    # κ calibration: measured service wall-clock vs the
+                    # wave model's prediction for this request
+                    self.admission.observe_service(
+                        self.admission.predictor.model_seconds(
+                            len(r.prompt), r.max_new_tokens),
+                        t_end - r._admit_t)
+                self.admission.finish(r, now=t_end)
                 self.active[i] = None
+        # deadline enforcement at the chunk's existing host sync (zero new
+        # syncs): completion above wins over expiry in the same chunk
+        for i in self.admission.expired_lanes(self.active, t_end):
+            self.admission.expire(self.active[i], "deadline-exceeded")
+            self.active[i] = None
         return len(live)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
+        """Drive the engine until queue and slots drain. Raises
+        `ServeStalled` (naming the stuck request ids/states) if max_steps
+        quanta pass with work still pending — a wedged engine fails loudly
+        instead of returning as if it had finished."""
         for _ in range(max_steps):
             if not self.queue and not any(self.active):
                 return
             self.step()
+        if not self.queue and not any(self.active):
+            return
+        pending = {r.rid: r.state for r in self.queue}
+        pending.update({r.rid: r.state
+                        for r in self.active if r is not None})
+        raise ServeStalled(pending, max_steps)
 
     # -- introspection ----------------------------------------------------
     @property

@@ -7,10 +7,18 @@ behavior benchmarks/serving.py quantifies the bucketed + fused engine
 against. Output semantics are the contract both engines share:
 `Request.out` holds max_new_tokens greedy tokens (first from prefill),
 truncated at eos_id inclusive.
+
+The oracle speaks the same admission protocol as the optimized engine
+(serve/admission.py): validation at submit, the same queue sweep /
+ordering / shedding decisions, and terminal states — but checks deadlines
+per token (it syncs every step anyway), making it the *semantic* oracle
+for the chunk-boundary checks in ServeEngine: any request BOTH engines
+complete must carry identical tokens; the oracle never runs chaos.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -18,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
+from .admission import (AdmissionConfig, AdmissionController, SLO_AWARE,
+                        ServeStalled, WaveLatencyPredictor)
 from .engine import Request, _write_lane
 
 
@@ -29,7 +39,7 @@ class ReferenceEngine:
     def __init__(self, model: Model, params, slots: int = 4,
                  max_len: int = 512, src_len: int = 0,
                  eos_id: Optional[int] = None, tracer=None,
-                 jit_prefill: bool = False):
+                 jit_prefill: bool = False, admission=None, clock=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -45,10 +55,24 @@ class ReferenceEngine:
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill) if jit_prefill \
             else model.prefill
+        self._clock = clock if clock is not None else time.perf_counter
+        if admission is None:
+            admission = AdmissionConfig()
+        elif isinstance(admission, str):
+            admission = AdmissionConfig(policy=admission)
+        if isinstance(admission, AdmissionConfig):
+            predictor = WaveLatencyPredictor(
+                model.cfg, admission.design, admission.tdp) \
+                if admission.policy == SLO_AWARE else None
+            admission = AdmissionController(
+                admission, slots=slots, max_len=max_len,
+                predictor=predictor)
+        self.admission: AdmissionController = admission
 
     # -- request flow --------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        if self.admission.on_submit(self.queue, req, self._clock()):
+            self.queue.append(req)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.active):
@@ -57,6 +81,7 @@ class ReferenceEngine:
         return None
 
     def _admit(self) -> None:
+        self.admission.sweep(self.queue, self._clock())
         while self.queue:
             slot = self._free_slot()
             if slot is None:
@@ -85,10 +110,13 @@ class ReferenceEngine:
         # clamp so the lane never appends past max_len (oversized requests
         # degrade to shorter completions, matching serve/engine.py); a
         # prompt that fills the cache retires with just the prefill token
-        self.budgets[slot] = min(req.max_new_tokens - 1,
-                                 max(0, self.max_len - S))
+        now = self._clock()
+        self.budgets[slot] = self.admission.clamp_budget(
+            req, min(req.max_new_tokens - 1, max(0, self.max_len - S)),
+            len(self.queue))
+        self.admission.note_admitted(req, now)
         if S >= self.max_len:
-            req.done = True
+            self.admission.finish(req, now=now)
             self.active[slot] = None
 
     # -- decode loop -----------------------------------------------------
@@ -108,6 +136,7 @@ class ReferenceEngine:
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(self.positions))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        now = self._clock()
         for i in live:
             r = self.active[i]
             tok = int(nxt[i])
@@ -116,12 +145,26 @@ class ReferenceEngine:
             self.budgets[i] -= 1
             if self.budgets[i] <= 0 or (self.eos_id is not None
                                         and tok == self.eos_id):
-                r.done = True
+                self.admission.finish(r, now=now)
                 self.active[i] = None
+        # per-token deadline enforcement (the oracle syncs every step, so
+        # this is the tightest check the chunked engine approximates)
+        for i in self.admission.expired_lanes(self.active, now):
+            self.admission.expire(self.active[i], "deadline-exceeded")
+            self.active[i] = None
         return len(live)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
+        """Drain the engine; raises ServeStalled naming the stuck requests
+        when max_steps quanta pass with work still pending (same contract
+        as ServeEngine.run_to_completion)."""
         for _ in range(max_steps):
             if not self.queue and not any(self.active):
                 return
             self.step()
+        if not self.queue and not any(self.active):
+            return
+        pending = {r.rid: r.state for r in self.queue}
+        pending.update({r.rid: r.state
+                        for r in self.active if r is not None})
+        raise ServeStalled(pending, max_steps)

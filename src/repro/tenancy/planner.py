@@ -344,6 +344,21 @@ def _scalar_float_cycles(gemms, accel: AcceleratorConfig,
     return sum(level_slices) * slice_cyc
 
 
+def predict_latency_s(gemms, design: Design, tdp: float = 400.0) -> float:
+    """Wave-model service latency (seconds) of one GEMM stream on one
+    design point — the per-request *prediction hook* the serving admission
+    controller uses (serve/admission.py). Same math as a TenantReport's
+    `latency_s` for a solo stream: un-truncated float cycles of the
+    analytical wave model over the stream's levels, divided by the design
+    clock. The admission controller feeds it `tenancy.trace.request_gemms`
+    streams, so `slo_attainment`'s met/missed accounting finally drives
+    admit/shed decisions instead of only reporting them."""
+    rows, cols, icn, pods = design
+    accel = build_accel(rows, cols, icn, tdp, pods)
+    return _scalar_float_cycles(list(gemms), accel, icn) / \
+        accel.array.clock_hz
+
+
 def plan_mix_scalar(
     mix: TenantMix,
     design: Design,

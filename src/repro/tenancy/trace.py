@@ -36,8 +36,16 @@ from .mix import Tenant
 class ServeTraceRecorder:
     """Engine-side event log; see ServeEngine(tracer=...) in serve/engine.py.
 
-    Events are ("prefill", prompt_len) and ("decode", lanes, contexts) in
-    engine wall-clock order — the step-locked sequence the pods would see.
+    Events are ("prefill", prompt_len, t) and ("decode", lanes, contexts,
+    t) — the step-locked sequence the pods would see. `t` is the event's
+    engine-relative start time; when the caller doesn't pass one (synthetic
+    traces, older callers) a monotonically increasing record index stands
+    in, so recording order is the time order. `trace_to_gemms` sorts on
+    `t` before lowering: priority scheduling can *record* interleaved
+    prefill/decode spans out of wall-clock order (a short-deadline lane's
+    prefill lands between decode chunks that were recorded first), and the
+    wave-model latency prediction is only faithful on the time-ordered
+    stream.
 
     Events carry the GEMM-shaping facts (what `trace_to_gemms` lowers);
     `spans` additionally carry the host wall-clock of every device call
@@ -49,11 +57,18 @@ class ServeTraceRecorder:
     events: list[tuple] = dataclasses.field(default_factory=list)
     spans: list[Span] = dataclasses.field(default_factory=list)
 
-    def on_prefill(self, rid: int, prompt_len: int) -> None:
-        self.events.append(("prefill", int(prompt_len)))
+    def _stamp(self, t: float | None) -> float:
+        return float(len(self.events)) if t is None else float(t)
 
-    def on_decode(self, lanes: int, contexts: list[int]) -> None:
-        self.events.append(("decode", int(lanes), tuple(int(c) for c in contexts)))
+    def on_prefill(self, rid: int, prompt_len: int,
+                   t: float | None = None) -> None:
+        self.events.append(("prefill", int(prompt_len), self._stamp(t)))
+
+    def on_decode(self, lanes: int, contexts: list[int],
+                  t: float | None = None) -> None:
+        self.events.append(("decode", int(lanes),
+                            tuple(int(c) for c in contexts),
+                            self._stamp(t)))
 
     def on_span(self, name: str, ts: float, dur: float, cat: str = "serve",
                 **args) -> None:
@@ -76,6 +91,13 @@ class ServeTraceRecorder:
         """Tokens processed by events of `kind`: prompt tokens for
         prefills, emitted (per-lane) tokens for decode steps."""
         return sum(e[1] for e in self.events if e[0] == kind)
+
+
+def _event_time(ev: tuple) -> float:
+    """Start time of a recorded event (the tuple's trailing stamp);
+    events appended without one (hand-built tuples) sort as t=0, which the
+    stable sort keeps in recording order."""
+    return ev[-1] if isinstance(ev[-1], float) else 0.0
 
 
 def _layer_gemms(t: _Trace, cfg: ArchConfig, d1: int, attn_d1: int,
@@ -117,10 +139,18 @@ def trace_to_gemms(recorder: ServeTraceRecorder, cfg: ArchConfig,
     `max_events` caps the number of (filtered) events lowered — the
     slice-accurate scheduler the drift check runs is O(tiles), so drift
     sampling bounds it.
+
+    Events are lowered in *start-time* order, not record order: admission
+    policies that reorder lanes (serve/admission.py priority scheduling)
+    may record a prefill span after decode chunks that started later, and
+    the sequential-chain dependency discipline below is only correct on
+    the time-ordered stream. The sort is stable, so events recorded
+    without timestamps (synthetic traces) keep their recording order.
     """
     t = _Trace()
-    events = recorder.events if kinds is None else \
-        [e for e in recorder.events if e[0] in kinds]
+    events = sorted(recorder.events, key=_event_time)
+    if kinds is not None:
+        events = [e for e in events if e[0] in kinds]
     if max_events is not None:
         events = events[:max_events]
     for ev in events:
@@ -132,7 +162,7 @@ def trace_to_gemms(recorder: ServeTraceRecorder, cfg: ArchConfig,
                 _layer_gemms(t, cfg, d1=seq, attn_d1=seq * cfg.n_heads,
                              ctx=seq, include_attention=include_attention)
         else:
-            _, lanes, contexts = ev
+            lanes, contexts = ev[1], ev[2]
             ctx = max(1, round(sum(contexts) / len(contexts))) \
                 if contexts else 0
             for _ in range(cfg.n_layers):
@@ -146,6 +176,27 @@ def trace_to_gemms(recorder: ServeTraceRecorder, cfg: ArchConfig,
             # ev[1] is rows either way: prompt length or fused lanes
             t.add(ev[1], cfg.d_model, cfg.vocab, name="lm_head")
     return t.gemms
+
+
+def request_gemms(cfg: ArchConfig, prompt_len: int, new_tokens: int,
+                  lanes: int = 1, include_attention: bool = True,
+                  include_lm_head: bool = False) -> list[GemmSpec]:
+    """The GEMM stream ONE request would put through the engine: a
+    prefill event at the prompt length followed by `new_tokens` decode
+    steps at growing context — the same lowering `trace_to_gemms` applies
+    to recorded timelines, built *predictively* for a request that has not
+    run yet. `lanes` prices the decode steps as if fused with that many
+    live lanes (1 = the request decodes alone, the conservative admission
+    estimate). This is the admission controller's per-request cost model
+    (serve/admission.py): the wave model turns it into predicted service
+    seconds, so `TenancyPlan.slo_attainment`-style SLO accounting can
+    *choose* admission instead of only reporting after the fact."""
+    rec = ServeTraceRecorder()
+    rec.on_prefill(0, prompt_len)
+    for s in range(max(0, int(new_tokens))):
+        rec.on_decode(lanes, [prompt_len + s] * lanes)
+    return trace_to_gemms(rec, cfg, include_attention=include_attention,
+                          include_lm_head=include_lm_head)
 
 
 def trace_tenant(name: str, recorder: ServeTraceRecorder, cfg: ArchConfig,

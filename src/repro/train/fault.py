@@ -21,6 +21,11 @@ What runs where:
     like a failure (re-mesh without it). This mirrors the SOSA scheduler's
     slice re-assignment: work is slice-shaped and owner-agnostic, so
     eviction costs one checkpoint restore, not a cold start.
+
+`Ewma` is the shared smoothing primitive: StragglerPolicy tracks one per
+host, and the serving chaos harness (serve/chaos.py) reuses it for
+slow-decode-chunk detection — same strike/patience discipline, one
+implementation.
 """
 
 from __future__ import annotations
@@ -29,6 +34,24 @@ import dataclasses
 import math
 import time
 from typing import Optional
+
+
+@dataclasses.dataclass
+class Ewma:
+    """Exponentially weighted moving average with a first-sample seed.
+
+    ``observe`` folds a sample in and returns the updated average; before
+    any sample, ``value`` is None (callers treat the stream as unwarmed
+    rather than biased toward 0).
+    """
+
+    alpha: float = 0.3
+    value: Optional[float] = None
+
+    def observe(self, sample: float) -> float:
+        self.value = float(sample) if self.value is None else \
+            (1.0 - self.alpha) * self.value + self.alpha * float(sample)
+        return self.value
 
 
 @dataclasses.dataclass
@@ -54,16 +77,16 @@ class StragglerPolicy:
     _strikes: dict = dataclasses.field(default_factory=dict)
 
     def observe(self, host: int, step_seconds: float) -> None:
-        prev = self._ewma.get(host, step_seconds)
-        self._ewma[host] = 0.7 * prev + 0.3 * step_seconds
+        self._ewma.setdefault(host, Ewma(alpha=0.3)).observe(step_seconds)
 
     def stragglers(self) -> list[int]:
         if len(self._ewma) < 2:
             return []
-        med = sorted(self._ewma.values())[len(self._ewma) // 2]
+        vals = sorted(e.value for e in self._ewma.values())
+        med = vals[len(vals) // 2]
         out = []
-        for h, t in self._ewma.items():
-            if t > self.slow_factor * med:
+        for h, e in self._ewma.items():
+            if e.value > self.slow_factor * med:
                 self._strikes[h] = self._strikes.get(h, 0) + 1
                 if self._strikes[h] >= self.patience:
                     out.append(h)
