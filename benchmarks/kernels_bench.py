@@ -69,4 +69,30 @@ def bench() -> list[str]:
                xs, dt, A, Bm, Cm, Dm)
     lines.append(f"kernels/ssd_s{S2},{us:.0f},chunk=64;"
                  f"state_scratch_kb={P * Nn * 4 / 1024:.0f}")
+
+    # ABFT guard overhead at the steady-state decode shape: M fused lanes
+    # against a [K, N] weight. The checksum envelope's extra work is one
+    # row of A, one column of B and the O(MN) verify — analytically
+    # ~(1/M + 1/N) of the GEMM; the wall ratio here is interpret-mode
+    # (correctness-shaped) but both sides pay the same backend, so the
+    # ratio tracks the FLOP ratio. Standalone guarded_gemm (no GuardTape)
+    # is pure, so jitting it for steady-state timing is safe.
+    from repro.kernels.systolic_gemm.guard import PodGuard, guarded_gemm
+    Md, Kd, Nd = 64, pick(512, 256), pick(512, 256)
+    xd = jnp.asarray(rng.standard_normal((Md, Kd)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((Kd, Nd)), jnp.float32)
+    plain = jax.jit(lambda a, b: systolic_gemm(a, b, interpret=True))
+    timings = {"plain": _time(plain, xd, wd)}
+    for mode in ("probe", "abft"):
+        g = PodGuard(mode=mode)
+        fn = jax.jit(lambda a, b, g=g: guarded_gemm(a, b, guard=g,
+                                                    interpret=True))
+        timings[mode] = _time(fn, xd, wd)
+    analytic = 1.0 / Md + 1.0 / Nd + 1.0 / (Md * Nd)
+    lines.append(
+        f"kernels/abft_overhead_m{Md}k{Kd}n{Nd},{timings['abft']:.0f},"
+        f"plain_us={timings['plain']:.0f};probe_us={timings['probe']:.0f};"
+        f"abft_over_plain={timings['abft'] / timings['plain']:.2f}x;"
+        f"probe_over_plain={timings['probe'] / timings['plain']:.2f}x;"
+        f"analytic_checksum_flops={analytic * 100:.1f}%")
     return lines

@@ -354,6 +354,132 @@ def _admission_phase(lines):
     return lines
 
 
+def _sdc_phase(lines):
+    """Silent-data-corruption rows (PodGuard + kernel-level chaos SDC).
+
+    sdc_chaos runs the pallas pod-GEMM engine under the abft guard with a
+    seeded SDC schedule in virtual time: the corrected / uncorrectable /
+    retry counts are exact integers on any box, and the run must finish
+    with zero slot leaks. sdc_guard_overhead times steady-state decode
+    with the guard off vs abft on the SAME pallas model (warm +
+    min-of-2), reporting the checksum envelope's throughput cost —
+    the paper-level claim is <=10% on real pod hardware; here the row
+    records the measured ratio on the interpret-mode backend."""
+    from repro.models.model import Model
+    from repro.serve.chaos import ChaosConfig, VirtualClock
+    from repro.serve.engine import ServeEngine
+    cfg, model, params = _mk_engine_parts()
+    pallas_model = Model(cfg, use_pallas=True)
+
+    # seeded SDC chaos through the guard + retry path (virtual time)
+    max_new = pick(6, 3)
+    eng = ServeEngine(pallas_model, params, slots=4, max_len=64,
+                      guard="abft", clock=VirtualClock(), max_retries=3,
+                      chaos=ChaosConfig(seed=7, p_sdc=0.5, sdc_elems=1,
+                                        service_seconds=0.01,
+                                        transient_tries=1))
+    reqs = _reset_requests(cfg, [5, 7, 9, 11], np.random.default_rng(2),
+                           max_new)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=2000)
+    leaks = sum(1 for r in eng.active if r is not None)
+    if leaks or any(not r.finished for r in reqs):
+        raise RuntimeError(f"sdc chaos run leaked slots ({leaks}) or left "
+                           f"non-terminal requests")
+    ge, inj = eng.guard_events, eng._chaos.injected
+    if inj["sdc"] and not (ge["corrected"] or ge["uncorrectable"]):
+        raise RuntimeError("injected SDC was never seen by the guard")
+    c = eng.admission.counts
+    lines.append(
+        f"serving/sdc_chaos,0,"
+        f"injected_sdc={inj['sdc']};corrected={ge['corrected']};"
+        f"uncorrectable={ge['uncorrectable']};device_calls={inj['calls']};"
+        f"done={c['done']};rejected={c['rejected']};slot_leaks=0")
+
+    # guard overhead: steady-state decode off vs abft on the pallas model
+    max_new2 = pick(17, 3)
+    lengths = [8, 8, 8, 8]
+
+    def decode_run(engine):
+        reqs = _reset_requests(cfg, lengths, np.random.default_rng(0),
+                               max_new2)
+        for r in reqs:
+            engine.submit(r)
+        engine._admit()
+        t0 = time.perf_counter()
+        while any(engine.active):
+            engine.step()
+        dt = time.perf_counter() - t0
+        assert all(r.done and r.state == "done" for r in reqs)
+        return dt
+
+    rates = {}
+    for guard in ("off", "abft"):
+        engine = ServeEngine(pallas_model, params, slots=4, max_len=64,
+                             decode_chunk=8, guard=guard)
+        decode_run(engine)                           # warm (compile)
+        dt = min(decode_run(engine), decode_run(engine))
+        toks = 4 * (max_new2 - 1)
+        rates[guard] = toks / dt
+    ratio = rates["off"] / rates["abft"]
+
+    # The hardware-relevant steady-state number: the wave model's cycles
+    # for the full-scale 64-lane decode GEMM stream, off vs abft at the
+    # deployment design point. The checksum ROW rides the array's tile
+    # slack — one of the 64 fused lanes is reserved for it (63 data lanes
+    # + checksum row fill the same 32-row tiles), because a naive 65th
+    # row would round up to a whole extra tile pass under the tile-
+    # quantized wave model. abft's cost is then the lost lane plus the
+    # +1 checksum column; exact and box-independent, so the <=10% budget
+    # is asserted. The wall ratio above is an interpret-mode emulation
+    # artifact: at the reduced 4-lane shapes the +1 row crosses a pow2
+    # block boundary and doubles the pallas grid.
+    from repro.configs import get_arch
+    from repro.core import analyze
+    from repro.core.dse import build_accel
+    from repro.core.tiling import GemmSpec
+    full = get_arch("granite-8b")
+    lanes = 64
+    shapes = [("qkv", full.d_model, full.d_model),
+              ("ffn", full.d_model, full.d_ff),
+              ("lm_head", full.d_model, full.vocab)]
+    accel = build_accel(32, 32, num_pods=256)
+
+    def stream_cycles(n_extra, faulty=0):
+        gemms = [GemmSpec(lanes, k, n + n_extra, gemm_id=i, name=nm)
+                 for i, (nm, k, n) in enumerate(shapes)]
+        return analyze(gemms, accel, faulty_pods=faulty).total_cycles
+
+    # tokens/cycle: off = lanes/cycles(N); abft = (lanes-1)/cycles(N+1)
+    modeled = 1.0 - ((lanes - 1) / lanes) * (stream_cycles(0)
+                                             / stream_cycles(1))
+    if modeled > 0.10:
+        raise RuntimeError(
+            f"modeled abft decode overhead {modeled:.1%} exceeds the 10% "
+            f"budget at the full-scale design point")
+    lines.append(
+        f"serving/sdc_guard_overhead,0,"
+        f"modeled_decode_overhead={modeled * 100:.1f}%;"
+        f"modeled_lanes={lanes - 1}+1checksum;"
+        f"off_tok_s={rates['off']:.0f};abft_tok_s={rates['abft']:.0f};"
+        f"interpret_wall_ratio={ratio:.2f}x")
+
+    # degraded-pod throughput: the same decode stream with pods masked
+    # out of the 256-pod machine (faulty pods' tiles remap onto
+    # survivors) — predicted capacity must shed monotonically
+    masked = (16, 64, 128)
+    degr = {f: stream_cycles(0, faulty=f) for f in (0,) + masked}
+    if any(degr[a] > degr[b] for a, b in zip((0,) + masked, masked)):
+        raise RuntimeError(f"degraded-pod cycles must be monotone in "
+                           f"masked pods: {degr}")
+    lines.append(
+        f"serving/sdc_degraded_pods,0,pods={accel.num_pods};" +
+        ";".join(f"tput_frac_f{f}={degr[0] / degr[f]:.3f}"
+                 for f in masked))
+    return lines
+
+
 def bench() -> list[str]:
     lines: list[str] = []
     _prefill_phase(lines)
@@ -361,4 +487,5 @@ def bench() -> list[str]:
     _family_phase(lines)
     _autotune_phase(lines)
     _admission_phase(lines)
+    _sdc_phase(lines)
     return lines

@@ -112,9 +112,21 @@ class SliceScheduler:
         pipeline_latency: int,
         interconnect: str = "butterfly-2",
         num_banks: Optional[int] = None,
+        faulty_pods: tuple[int, ...] = (),
     ):
         self.num_pods = num_pods
         self.num_banks = num_banks if num_banks is not None else num_pods
+        # degraded-pod operation: dead pods are masked out of every slice's
+        # free-pod pool (the fabric and bank count are physically unchanged,
+        # so routing and ports keep full-machine geometry); busy/utilization
+        # fractions keep the full-machine denominator.
+        dead = set(faulty_pods)
+        if any(p < 0 or p >= num_pods for p in dead):
+            raise ValueError(f"faulty_pods {sorted(dead)} out of range "
+                             f"for {num_pods} pods")
+        self.healthy_pods = [p for p in range(num_pods) if p not in dead]
+        if not self.healthy_pods:
+            raise ValueError("all pods faulty: nothing to schedule onto")
         self.rows = array_rows
         # slice service time: r streaming cycles (the r x r partition makes
         # every full tile take exactly r cycles) + fill/drain latency.
@@ -131,7 +143,7 @@ class SliceScheduler:
 
     def _new_slice(self) -> _SliceState:
         return _SliceState(
-            free_pods=list(range(self.num_pods - 1, -1, -1)),
+            free_pods=list(reversed(self.healthy_pods)),
             x_tile={}, w_tile={}, p_busy=set(),
             net_x=_inc_router(self.router),
             net_w=_inc_router(self.router),

@@ -53,6 +53,34 @@ from .tiling import (GemmSpec, TileOpGraph, gemm_levels, tile_counts,
                      tile_workload)
 
 
+def _faulty_ids(faulty_pods, num_pods: int) -> tuple[int, ...]:
+    """Normalize a degraded-pod mask to explicit pod ids.
+
+    An int n masks the n highest-numbered pods (the convention the
+    analytical paths price by count alone); a sequence names the dead pods
+    directly. Validates 0 <= id < num_pods and at least one survivor."""
+    if isinstance(faulty_pods, (int, np.integer)):
+        n = int(faulty_pods)
+        if not 0 <= n < num_pods:
+            raise ValueError(f"faulty_pods={n} out of range for "
+                             f"{num_pods} pods")
+        return tuple(range(num_pods - n, num_pods))
+    ids = tuple(sorted(set(int(p) for p in faulty_pods)))
+    if any(p < 0 or p >= num_pods for p in ids):
+        raise ValueError(f"faulty_pods {list(ids)} out of range for "
+                         f"{num_pods} pods")
+    if len(ids) >= num_pods:
+        raise ValueError("all pods faulty: nothing to run on")
+    return ids
+
+
+def _faulty_count(faulty_pods) -> int:
+    """Number of dead pods in a mask (int passes through)."""
+    if isinstance(faulty_pods, (int, np.integer)):
+        return int(faulty_pods)
+    return len(set(int(p) for p in faulty_pods))
+
+
 def icn_spec_for(name: str, ports: int):
     if name.startswith("butterfly"):
         k = int(name.split("-")[1]) if "-" in name else 1
@@ -120,15 +148,24 @@ def simulate(
     interconnect: str = "butterfly-2",
     k_part: int | None = None,
     name: str = "",
+    faulty_pods=0,
 ) -> SimResult:
-    """Slice-accurate simulation: tile -> schedule -> metrics."""
+    """Slice-accurate simulation: tile -> schedule -> metrics.
+
+    faulty_pods (int count or sequence of pod ids) retiles and reschedules
+    over the survivors: a dead pod takes its local SRAM bank group with it
+    (matching bank masks in tile_workload) while fabric geometry and the
+    full-machine utilization denominator stay fixed."""
     arr = accel.array
-    graph = tile_workload(gemms, arr, k_part=k_part, num_banks=accel.num_pods)
+    dead = _faulty_ids(faulty_pods, accel.num_pods)
+    graph = tile_workload(gemms, arr, k_part=k_part,
+                          num_banks=accel.num_pods, faulty_banks=dead)
     sched = SliceScheduler(
         num_pods=accel.num_pods,
         array_rows=arr.rows,
         pipeline_latency=arr.pipeline_latency,
         interconnect=interconnect,
+        faulty_pods=dead,
     ).schedule(graph)
 
     k_bar = (sum(op.k for op in graph.ops) / len(graph.ops)) if graph.ops else arr.rows
@@ -207,6 +244,7 @@ def analyze_scalar(
     interconnect: str = "butterfly-2",
     k_part: int | None = None,
     name: str = "",
+    faulty_pods=0,
 ) -> SimResult:
     """Closed-form wave model of the tiled schedule (pure-Python reference).
 
@@ -222,7 +260,11 @@ def analyze_scalar(
     arr = accel.array
     r, c = arr.rows, arr.cols
     kp = k_part if k_part is not None else r
-    eff_pods = accel.num_pods * icn_efficiency(interconnect)
+    # degraded pods shrink the wave width only: the fabric, bank count and
+    # the peak/utilization denominators keep full-machine geometry
+    _faulty_ids(faulty_pods, accel.num_pods)      # validate
+    healthy = accel.num_pods - _faulty_count(faulty_pods)
+    eff_pods = healthy * icn_efficiency(interconnect)
 
     total_macs = 0
     total_slices = 0.0
@@ -485,6 +527,7 @@ def analyze_batch(
     packed: PackedWorkloads,
     design: DesignVector,
     k_part: int | np.ndarray | None = None,
+    faulty_pods: int | np.ndarray = 0,
 ) -> BatchedAnalysis:
     """The closed-form wave model, broadcast over the full grid.
 
@@ -494,6 +537,13 @@ def analyze_batch(
     workload totals. `k_part` may be a scalar (applied everywhere), an
     array of shape (P,) (per-point activation partition — used by the
     tiling sweep), or None for the paper's k = rows rule.
+
+    `faulty_pods` (scalar count or (P,) per-point counts) shrinks the wave
+    width to the surviving pods while keeping the fabric spec and the
+    peak/utilization denominators at full-machine geometry — predictions
+    are therefore monotone non-increasing in masked pods by construction
+    (eff_pods only ever enters as a divisor under a max with the RAW
+    critical path).
     """
     d1, d2, d3 = packed.d1[None, :], packed.d2[None, :], packed.d3[None, :]
     r = design.rows[:, None]
@@ -509,8 +559,14 @@ def analyze_batch(
     tiles = n_i * n_j * n_l                      # (P, G)
 
     # wave count per (workload, level) segment: waves of eff_pods concurrent
-    # chains, floored by the longest RAW chain of the level
-    eff_pods = (design.num_pods * design.icn_eff)[:, None]
+    # chains, floored by the longest RAW chain of the level; degraded pods
+    # narrow the wave (survivors only)
+    f = np.asarray(faulty_pods, dtype=np.int64)
+    healthy = design.num_pods - f                # (P,) by broadcast
+    if np.any(f < 0) or np.any(healthy < 1):
+        raise ValueError("faulty_pods must satisfy 0 <= f < num_pods "
+                         "at every design point")
+    eff_pods = (healthy * design.icn_eff)[:, None]
     pod_slices = np.add.reduceat(tiles, packed.seg_starts, axis=1)
     crit = np.maximum.reduceat(n_j, packed.seg_starts, axis=1)
     level_slices = np.maximum(crit, pod_slices / eff_pods)   # (P, S)
@@ -568,14 +624,17 @@ def analyze(
     interconnect: str = "butterfly-2",
     k_part: int | None = None,
     name: str = "",
+    faulty_pods=0,
 ) -> SimResult:
     """Closed-form wave model of the tiled schedule (see `analyze_scalar`
     for the math) — thin single-point wrapper over the batched engine."""
     if not gemms:
-        return analyze_scalar(gemms, accel, interconnect, k_part, name)
+        return analyze_scalar(gemms, accel, interconnect, k_part, name,
+                              faulty_pods=faulty_pods)
     packed = pack_workloads({name or "workload": gemms})
     design = DesignVector.from_accel(accel, interconnect)
-    batch = analyze_batch(packed, design, k_part=k_part)
+    batch = analyze_batch(packed, design, k_part=k_part,
+                          faulty_pods=_faulty_count(faulty_pods))
     return batch.result(0, 0, name=name)
 
 

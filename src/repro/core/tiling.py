@@ -113,12 +113,18 @@ def tile_gemm(
     producer_final: dict[tuple[int, int, int], int] | None = None,
     producer_gemms: tuple[int, ...] = (),
     producer_all_ops: tuple[int, ...] = (),
+    faulty_banks: tuple[int, ...] = (),
 ) -> TileOpGraph:
     """Tile one GEMM into TileOps (k_part=None -> the paper's r x r rule).
 
     producer_all_ops: op_ids this GEMM's first-wave tiles must wait for
     (coarse inter-layer dependency — the paper schedules layer by layer with
     RAW dependencies between them).
+
+    faulty_banks: bank ids masked out of the round-robin placement (a dead
+    pod takes its local SRAM bank group with it — degraded-pod retiling
+    spreads tiles over the survivors). Empty mask reproduces the seed
+    placement bit-for-bit.
     """
     r, c = array.rows, array.cols
     if k_part is None:
@@ -134,15 +140,25 @@ def tile_gemm(
     oid = start_op_id
 
     # Bank placement: X tiles keyed by (i, j), W by (j, l), P by (i, l);
-    # spread round-robin over banks (single-ported, one reader per slice).
+    # spread round-robin over the HEALTHY banks (single-ported, one reader
+    # per slice). With no faulty banks, `banks[e % num_banks] == e %
+    # num_banks` — identical to the seed placement.
+    dead = set(faulty_banks)
+    if any(b < 0 or b >= num_banks for b in dead):
+        raise ValueError(f"faulty_banks {sorted(dead)} out of range "
+                         f"for {num_banks} banks")
+    banks = [b for b in range(num_banks) if b not in dead]
+    if not banks:
+        raise ValueError("all banks faulty: nothing to tile onto")
+
     def xb(i: int, j: int) -> int:
-        return (i * len(r_chunks) + j) % num_banks
+        return banks[(i * len(r_chunks) + j) % len(banks)]
 
     def wb(j: int, l: int) -> int:
-        return (gemm.gemm_id * 7 + j * len(c_chunks) + l) % num_banks
+        return banks[(gemm.gemm_id * 7 + j * len(c_chunks) + l) % len(banks)]
 
     def pb(i: int, l: int) -> int:
-        return (gemm.gemm_id * 13 + i * len(c_chunks) + l) % num_banks
+        return banks[(gemm.gemm_id * 13 + i * len(c_chunks) + l) % len(banks)]
 
     for i, k in enumerate(k_chunks):
         for l, c_eff in enumerate(c_chunks):
@@ -173,6 +189,7 @@ def tile_workload(
     k_part: int | None = None,
     num_banks: int = 256,
     layer_dependencies: bool = True,
+    faulty_banks: tuple[int, ...] = (),
 ) -> TileOpGraph:
     """Tile a whole workload (list of GEMM layers, in execution order).
 
@@ -197,6 +214,7 @@ def tile_workload(
         g = tile_gemm(
             gemm, array, k_part=k_part, num_banks=num_banks,
             start_op_id=oid, producer_all_ops=producers,
+            faulty_banks=faulty_banks,
         )
         all_ops.extend(g.ops)
         final.update(g.final_tiles)

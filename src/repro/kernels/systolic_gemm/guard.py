@@ -1,0 +1,390 @@
+"""SDC safety for the pod-GEMM path: ABFT checksums + Freivalds probes.
+
+At 256-pod scale a bit flip inside one systolic tile silently corrupts
+one output element — and one wrong logit emits wrong tokens forever.
+This module wraps the pallas pod GEMM in an algorithm-based fault
+tolerance (ABFT) envelope:
+
+  * **abft** — the classic Huang–Abraham scheme: append the column-sum
+    row to A and the row-sum column to B, so ``C_aug = A_aug @ B_aug``
+    carries a checksum row and column of C for free. Comparing them
+    against the freshly summed data block *detects* corruption, and a
+    single corrupted element is *located* at (argmax row residual,
+    argmax col residual) — the faulty (block_m, block_n) tile follows
+    from the autotuned geometry. The located element is repaired by an
+    exact f32 recompute of that one dot product (cheaper and tighter
+    than residual addition, whose checksum rounding noise would leak
+    into the corrected value).
+  * **probe** — a randomized Freivalds check: ``C @ v`` vs
+    ``A @ (B @ v)`` for a Rademacher vector v. Detection only (no
+    location), O(MN + MK + KN) instead of an extra GEMM column.
+    A *single-element* corruption of magnitude above the float-noise
+    tolerance is always detected (the residual at its row is exactly
+    ``±delta``); an adversarial multi-element corruption pattern E
+    escapes one probe only if ``E @ v = 0``, which for Rademacher v
+    has probability <= 1/2 per probe, so <= 2**-probes overall — the
+    documented bound the property test exercises.
+  * **off** — the guard is never consulted; the serving path is
+    bit-identical to the unguarded engine (tokens, jit cache sizes,
+    host sync counts — gated by test).
+
+Guarded execution runs the *raw* kernel (unit scale, zero bias, no
+activation, f32 out — an identity epilogue, so the kernel's accumulator
+is observed exactly), verifies/corrects, then applies the same
+``_epilogue_math`` the fused kernel would have. The guarded path is
+deliberately NOT wrapped in its own ``jax.jit``: the GuardTape below
+has trace-time side effects (per-call GEMM indices, flag registration)
+that an inner jit cache would silently skip on a cache hit. Inside the
+engine's outer jit it is traced inline; in eager tests it runs per call.
+
+Float tolerance: checksums are computed in f32 but stored in the input
+dtype, so for bf16 the checksum row carries ~2**-9 relative rounding
+noise against the f32-accumulated data sums. The default ``rtol`` of
+1/64 sits ~8x above that noise floor and far below any corruption worth
+detecting (an SDC bit flip in exponent or high mantissa moves the value
+by orders of magnitude). int8 inputs are rejected under ``abft`` — an
+int8 column sum overflows the int8 checksum row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .systolic_gemm import _epilogue_math
+
+OFF, PROBE, ABFT = "off", "probe", "abft"
+MODES = (OFF, PROBE, ABFT)
+
+# static unroll bound for injected corruptions per GEMM (2 distinct
+# rows/cols defeats single-corruption ABFT location -> uncorrectable)
+MAX_SDC_ELEMS = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PodGuard:
+    """SDC-guard config for the pod-GEMM path.
+
+    mode:   "off" (bit-identical to unguarded), "probe" (Freivalds,
+            detect-only), "abft" (checksum row/col: detect + locate +
+            correct single corruptions).
+    rtol:   float-noise tolerance, relative to the largest augmented-
+            output magnitude (see module docstring).
+    probes: independent Freivalds probes; miss probability for an
+            adversarial corruption is <= 2**-probes.
+    probe_seed: PRNG seed for the Rademacher probe vectors.
+    """
+
+    mode: str = OFF
+    rtol: float = 1.0 / 64.0
+    probes: int = 1
+    probe_seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"PodGuard.mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if not (0.0 < self.rtol < 1.0):
+            raise ValueError(f"rtol must be in (0, 1), got {self.rtol}")
+        if self.probes < 1:
+            raise ValueError("probes must be >= 1")
+
+
+def as_guard(guard) -> PodGuard:
+    """None -> off; a mode string -> PodGuard(mode); PodGuard passes."""
+    if guard is None:
+        return PodGuard(mode=OFF)
+    if isinstance(guard, str):
+        return PodGuard(mode=guard)
+    if isinstance(guard, PodGuard):
+        return guard
+    raise TypeError(f"guard must be None, str, or PodGuard, got "
+                    f"{type(guard).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# GuardTape: trace-time accumulator threading guard state through a model
+# call without touching the Model API. layers.pod_dense/unembed consult
+# active_guard(); the guarded GEMM registers its verdict flags on the
+# tape; the engine returns tape.totals() as extra jit outputs so the
+# verdicts ride the existing host syncs as runtime values.
+# ---------------------------------------------------------------------------
+
+_TAPES: list["GuardTape"] = []
+
+
+class GuardTape:
+    """Context manager scoping a PodGuard (and optional SDC injection
+    plan) over every pod GEMM traced inside the ``with`` block.
+
+    ``inject`` is a traced int32[3] ``(target_gemm, draw_seed, n_elems)``
+    plan (or None): the guarded GEMM whose trace-order index equals
+    ``target_gemm`` gets ``n_elems`` elements of its raw output
+    corrupted by ``magnitude`` — a pure function of the plan, so the
+    schedule is deterministic under jit. ``target_gemm < 0`` disarms.
+    """
+
+    def __init__(self, guard: PodGuard, inject=None,
+                 magnitude: float = 1e4):
+        self.guard = guard
+        self.inject = inject
+        self.magnitude = float(magnitude)
+        self._next = 0
+        self._corrected = []
+        self._uncorrected = []
+
+    def __enter__(self):
+        _TAPES.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        popped = _TAPES.pop()
+        assert popped is self, "unbalanced GuardTape nesting"
+        return False
+
+    def next_index(self) -> int:
+        i = self._next
+        self._next += 1
+        return i
+
+    def record(self, corrected, uncorrected) -> None:
+        self._corrected.append(jnp.asarray(corrected, jnp.int32))
+        self._uncorrected.append(jnp.asarray(uncorrected, jnp.int32))
+
+    def totals(self):
+        """(corrected_total, uncorrected_total) as traced int32 scalars."""
+        zero = jnp.int32(0)
+        corr = sum(self._corrected, zero)
+        unc = sum(self._uncorrected, zero)
+        return jnp.asarray(corr, jnp.int32), jnp.asarray(unc, jnp.int32)
+
+    @property
+    def gemms(self) -> int:
+        """Guarded GEMMs registered so far (trace-time count)."""
+        return self._next
+
+
+def active_tape():
+    return _TAPES[-1] if _TAPES else None
+
+
+def active_guard():
+    """The PodGuard of the innermost tape, or None (-> unguarded path)."""
+    tape = active_tape()
+    if tape is None or tape.guard.mode == OFF:
+        return None
+    return tape.guard
+
+
+# ---------------------------------------------------------------------------
+# ABFT math
+# ---------------------------------------------------------------------------
+
+def augment_x(x):
+    """Append the column-sum checksum row: [M, K] -> [M+1, K]."""
+    ck = x.astype(jnp.float32).sum(axis=0, keepdims=True).astype(x.dtype)
+    return jnp.concatenate([x, ck], axis=0)
+
+
+def augment_w(w):
+    """Append the row-sum checksum column: [K, N] -> [K, N+1]."""
+    ck = w.astype(jnp.float32).sum(axis=1, keepdims=True).astype(w.dtype)
+    return jnp.concatenate([w, ck], axis=1)
+
+
+def augment_wt(w):
+    """Transposed-layout checksum: w [N, K] -> [N+1, K]; the appended row
+    is the sum over N, so ``x_aug @ w_aug.T`` carries the same checksum
+    column as the [K, N] layout would."""
+    ck = w.astype(jnp.float32).sum(axis=0, keepdims=True).astype(w.dtype)
+    return jnp.concatenate([w, ck], axis=0)
+
+
+def _tol(c_aug, rtol: float):
+    """Detection threshold: relative to the largest augmented magnitude
+    (the checksum row/col dominates), so float accumulation noise stays
+    under it while any corruption worth catching clears it — including
+    when the corrupted element itself is what dominates the max."""
+    return rtol * (jnp.max(jnp.abs(c_aug)) + 1.0)
+
+
+def abft_verify(c_aug, x, w, *, rtol: float, transpose: bool = False):
+    """Check (and repair) one raw augmented GEMM output.
+
+    c_aug: [M+1, N+1] f32 raw kernel output of the augmented operands.
+    x:     [M, K] original left operand.
+    w:     [K, N] (or [N, K] when ``transpose``) original right operand.
+
+    Returns ``(c, report)`` where c is the verified/corrected [M, N]
+    data block and report holds traced int32 scalars:
+
+      detected    any residual above tolerance
+      corrected   corruption contained (single data element repaired by
+                  exact recompute, or checksum-only hit — data clean)
+      uncorrected detected but not provably repaired -> caller must
+                  recompute (the engine retries the device call)
+      row, col    located data element (argmax residuals; only
+                  meaningful when a single data corruption was found)
+    """
+    M = x.shape[0]
+    N = w.shape[0] if transpose else w.shape[1]
+    c = c_aug[:M, :N]
+    row_ck = c_aug[:M, N]                      # checksum column -> per-row
+    col_ck = c_aug[M, :N]                      # checksum row    -> per-col
+    row_res = row_ck - c.sum(axis=1)
+    col_res = col_ck - c.sum(axis=0)
+    tol = _tol(c_aug, rtol)
+    row_bad = jnp.abs(row_res) > tol
+    col_bad = jnp.abs(col_res) > tol
+    n_row = row_bad.sum(dtype=jnp.int32)
+    n_col = col_bad.sum(dtype=jnp.int32)
+    detected = (n_row > 0) | (n_col > 0)
+    # a data corruption at (r, cc) moves row_res[r] AND col_res[cc] by
+    # the same -delta; a hit confined to the checksum row/col moves only
+    # one side -> the data block is clean and the checksums are discarded
+    checksum_only = (n_row > 0) != (n_col > 0)
+    locatable = (n_row == 1) & (n_col == 1)
+    r = jnp.argmax(jnp.abs(row_res)).astype(jnp.int32)
+    cc = jnp.argmax(jnp.abs(col_res)).astype(jnp.int32)
+    # repair by exact f32 recompute of the one located dot product —
+    # residual addition would fold the checksum rounding noise into the
+    # corrected value; a fresh dot is accurate to f32 accumulation order
+    xr = jnp.take(x, r, axis=0).astype(jnp.float32)
+    wc = (jnp.take(w, cc, axis=0) if transpose
+          else jnp.take(w, cc, axis=1)).astype(jnp.float32)
+    fix = jnp.dot(xr, wc)
+    fixed = jnp.where(locatable, c.at[r, cc].set(fix), c)
+    # recheck the repaired row/col: a multi-corruption masquerading as a
+    # single one leaves a residual after the fix and stays uncorrected
+    rr_after = jnp.abs(row_ck[r] - fixed[r, :].sum())
+    cr_after = jnp.abs(col_ck[cc] - fixed[:, cc].sum())
+    fix_ok = locatable & (rr_after <= tol) & (cr_after <= tol)
+    c = jnp.where(fix_ok, fixed, c)
+    corrected = (fix_ok | checksum_only) & detected
+    uncorrected = detected & ~corrected
+    report = {
+        "detected": detected.astype(jnp.int32),
+        "corrected": corrected.astype(jnp.int32),
+        "uncorrected": uncorrected.astype(jnp.int32),
+        "row": r,
+        "col": cc,
+    }
+    return c, report
+
+
+def freivalds_detect(c, x, w, *, probes: int, seed: int, rtol: float,
+                     transpose: bool = False):
+    """Randomized verification: ``C @ v`` vs ``A @ (B @ v)`` in f32 for
+    ``probes`` independent Rademacher vectors. Returns a traced int32
+    detection flag. Miss probability for an adversarial corruption is
+    <= 2**-probes; a lone corrupted element above tolerance is always
+    caught (its row residual is exactly +-delta)."""
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    N = c.shape[1]
+    key = jax.random.PRNGKey(seed)
+    detected = jnp.bool_(False)
+    tol = _tol(c, rtol) * max(1, int(N)) ** 0.5  # residual sums ~sqrt(N)
+    for p in range(probes):
+        v = jnp.where(jax.random.bernoulli(jax.random.fold_in(key, p),
+                                           0.5, (N,)), 1.0, -1.0)
+        bv = jnp.dot(v, wf) if transpose else jnp.dot(wf, v)
+        resid = jnp.dot(c, v) - jnp.dot(xf, bv)
+        detected = detected | (jnp.max(jnp.abs(resid)) > tol)
+    return detected.astype(jnp.int32)
+
+
+def tile_of(row, col, block_m: int, block_n: int):
+    """Map a located element to its (block_m, block_n) output tile."""
+    return row // block_m, col // block_n
+
+
+# ---------------------------------------------------------------------------
+# Deterministic kernel-level SDC injection (testing hook; serve/chaos.py
+# draws the plan host-side, the corruption itself is traced)
+# ---------------------------------------------------------------------------
+
+def inject_sdc(c, gemm_index: int, plan, magnitude: float,
+               data_m: int, data_n: int):
+    """Corrupt the raw GEMM output per an int32[3] plan
+    ``(target_gemm, draw_seed, n_elems)``. A no-op unless
+    ``target_gemm == gemm_index``. Element e lands at
+    ``((r0+e) % data_m, (c0+e) % data_n)`` with (r0, c0) drawn from
+    ``draw_seed`` — successive elements occupy distinct rows AND
+    columns (for data_m, data_n >= 2), so ``n_elems >= 2`` is
+    guaranteed to defeat single-corruption ABFT location."""
+    plan = jnp.asarray(plan, jnp.int32)
+    hit = plan[0] == jnp.int32(gemm_index)
+    kr, kc = jax.random.split(jax.random.PRNGKey(plan[1]))
+    r0 = jax.random.randint(kr, (), 0, data_m)
+    c0 = jax.random.randint(kc, (), 0, data_n)
+    for e in range(MAX_SDC_ELEMS):
+        amt = jnp.where(hit & (e < plan[2]), jnp.float32(magnitude),
+                        jnp.float32(0.0))
+        c = c.at[(r0 + e) % data_m, (c0 + e) % data_n].add(amt)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# The guarded GEMM path (NOT jitted here — see module docstring)
+# ---------------------------------------------------------------------------
+
+def guarded_gemm(x, w, scale=None, bias=None, *, guard: PodGuard,
+                 activation: str | None = None, out_dtype=jnp.float32,
+                 transpose: bool = False, interpret: bool | None = None):
+    """Pod GEMM under a PodGuard: raw kernel -> (inject) -> verify/
+    correct -> epilogue. x [M, K]; w [K, N] ([N, K] when ``transpose``).
+
+    Registers (corrected, uncorrected) flags on the active GuardTape;
+    standalone calls (no tape) just return the verified output. Blocks
+    come from the autotuner at the ORIGINAL (M, K, N) so tile
+    attribution matches the unguarded geometry.
+    """
+    if guard.mode == OFF:
+        raise ValueError("guarded_gemm called with guard off — the caller "
+                         "should take the unguarded path")
+    M, K = x.shape
+    N = w.shape[0] if transpose else w.shape[1]
+    if guard.mode == ABFT and x.dtype == jnp.int8:
+        raise ValueError("abft guard does not support int8 operands: the "
+                         "column-sum checksum row overflows int8; use "
+                         "mode='probe' or dequantize first")
+    from .ops import _auto_blocks, _rup, systolic_gemm, systolic_gemm_t
+    bm, bn, bk = _auto_blocks(M, K, N, x.dtype, out_dtype)
+
+    tape = active_tape()
+    idx = tape.next_index() if tape is not None else 0
+
+    kern = systolic_gemm_t if transpose else systolic_gemm
+    raw = dict(activation=None, out_dtype=jnp.float32, interpret=interpret,
+               block_m=bm, block_n=bn, block_k=bk)
+    if guard.mode == ABFT:
+        x_aug = augment_x(x)
+        w_aug = augment_wt(w) if transpose else augment_w(w)
+        c_aug = kern(x_aug, w_aug, None, None, **raw)
+        if tape is not None and tape.inject is not None:
+            c_aug = inject_sdc(c_aug, idx, tape.inject, tape.magnitude,
+                               M, N)
+        c, report = abft_verify(c_aug, x, w, rtol=guard.rtol,
+                                transpose=transpose)
+        corrected, uncorrected = report["corrected"], report["uncorrected"]
+    else:                                       # PROBE: detect-only
+        c = kern(x, w, None, None, **raw)
+        if tape is not None and tape.inject is not None:
+            c = inject_sdc(c, idx, tape.inject, tape.magnitude, M, N)
+        detected = freivalds_detect(
+            c, x, w, probes=guard.probes, seed=guard.probe_seed,
+            rtol=guard.rtol, transpose=transpose)
+        corrected = jnp.int32(0)
+        uncorrected = detected
+    if tape is not None:
+        tape.record(corrected, uncorrected)
+
+    if scale is None:
+        scale = jnp.ones((N,), jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    out = _epilogue_math(c, scale, bias, activation).astype(out_dtype)
+    return out

@@ -102,23 +102,34 @@ def systolic_gemm(x, w, scale=None, bias=None, *, activation=None,
 def fused_lane_gemm(x, w, scale=None, bias=None, *, activation=None,
                     out_dtype=None, interpret: bool | None = None,
                     block_m: int | None = None, block_n: int | None = None,
-                    block_k: int | None = None):
+                    block_k: int | None = None, guard=None):
     """Fused-lane GEMM: x [..., K] @ w [K, N] -> [..., N].
 
     All leading axes of x (decode lanes, sequence positions, batch) fuse
     into the GEMM M axis — one pod GEMM instead of a fan of GEMVs, which
     is exactly the fused-lane shape tenancy/trace.py attributes to the
     engine's step-locked decode. Leading shape is restored on return.
+
+    ``guard`` (a guard.PodGuard, or None) diverts to the SDC-checked
+    path (ABFT checksums / Freivalds probe, guard.py); None or mode
+    "off" takes the jitted unguarded kernel untouched — bit-identical
+    to a build without the guard.
     """
     lead = x.shape[:-1]
     m = 1
     for d in lead:
         m *= d
     out_dtype = jnp.float32 if out_dtype is None else out_dtype
-    out = systolic_gemm(
-        x.reshape(m, x.shape[-1]), w, scale, bias, activation=activation,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        out_dtype=out_dtype, interpret=interpret)
+    if guard is not None and guard.mode != "off":
+        from .guard import guarded_gemm
+        out = guarded_gemm(
+            x.reshape(m, x.shape[-1]), w, scale, bias, guard=guard,
+            activation=activation, out_dtype=out_dtype, interpret=interpret)
+    else:
+        out = systolic_gemm(
+            x.reshape(m, x.shape[-1]), w, scale, bias, activation=activation,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret)
     return out.reshape(lead + (w.shape[1],))
 
 
@@ -163,19 +174,27 @@ def systolic_gemm_t(x, w, scale=None, bias=None, *, activation=None,
 def fused_lane_gemm_t(x, w, scale=None, bias=None, *, activation=None,
                       out_dtype=None, interpret: bool | None = None,
                       block_m: int | None = None, block_n: int | None = None,
-                      block_k: int | None = None):
+                      block_k: int | None = None, guard=None):
     """Fused-lane transposed GEMM: x [..., K] @ w [N, K]^T -> [..., N].
     The LM-head entry point: all decode lanes / sequence positions fuse
-    into the M axis of ONE pod GEMM against the stored [vocab, d] table."""
+    into the M axis of ONE pod GEMM against the stored [vocab, d] table.
+    ``guard`` as in `fused_lane_gemm` (transposed-layout checksums)."""
     lead = x.shape[:-1]
     m = 1
     for d in lead:
         m *= d
     out_dtype = jnp.float32 if out_dtype is None else out_dtype
-    out = systolic_gemm_t(
-        x.reshape(m, x.shape[-1]), w, scale, bias, activation=activation,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        out_dtype=out_dtype, interpret=interpret)
+    if guard is not None and guard.mode != "off":
+        from .guard import guarded_gemm
+        out = guarded_gemm(
+            x.reshape(m, x.shape[-1]), w, scale, bias, guard=guard,
+            activation=activation, out_dtype=out_dtype, transpose=True,
+            interpret=interpret)
+    else:
+        out = systolic_gemm_t(
+            x.reshape(m, x.shape[-1]), w, scale, bias, activation=activation,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            out_dtype=out_dtype, interpret=interpret)
     return out.reshape(lead + (w.shape[0],))
 
 

@@ -131,10 +131,11 @@ def pod_dense(x, w, *, activation: str | None = None):
     (parallel.autoshard.choose_blocks, per-shape cached); `activation`
     runs in the kernel's fused epilogue (the paper's SIMD post-processor).
     """
+    from ..kernels.systolic_gemm.guard import active_guard
     from ..kernels.systolic_gemm.ops import fused_lane_gemm
     k = x.shape[-1]
     out = fused_lane_gemm(x, w.reshape(k, -1), activation=activation,
-                          out_dtype=x.dtype)
+                          out_dtype=x.dtype, guard=active_guard())
     return out.reshape(x.shape[:-1] + w.shape[1:])
 
 
@@ -198,11 +199,14 @@ def unembed(p: dict, x, use_pallas: bool = False):
     variant, which streams the stored [vocab, d] token table directly (no
     transpose copy of the embedding in HBM)."""
     if use_pallas:
+        from ..kernels.systolic_gemm.guard import active_guard
         from ..kernels.systolic_gemm.ops import (fused_lane_gemm,
                                                  fused_lane_gemm_t)
+        g = active_guard()
         if "unembed" in p:
-            return fused_lane_gemm(x, p["unembed"], out_dtype=x.dtype)
-        return fused_lane_gemm_t(x, p["tok"], out_dtype=x.dtype)
+            return fused_lane_gemm(x, p["unembed"], out_dtype=x.dtype,
+                                   guard=g)
+        return fused_lane_gemm_t(x, p["tok"], out_dtype=x.dtype, guard=g)
     if "unembed" in p:
         return jnp.einsum("...d,dv->...v", x, p["unembed"])
     return jnp.einsum("...d,vd->...v", x, p["tok"])

@@ -100,7 +100,13 @@ class Model:
         return jax.checkpoint(fn) if self.remat else fn
 
     def _scan(self, body, carry, xs):
-        if not self.unroll:
+        # an active PodGuard tape accumulates per-GEMM flags as traced
+        # values on Python state — under lax.scan those would leak out of
+        # the scan body, so a taped trace takes the unrolled path (guard
+        # engines trade compile time for per-layer checksum visibility;
+        # untaped traces keep the seed scan and its jit cache exactly)
+        from ..kernels.systolic_gemm.guard import active_tape
+        if not self.unroll and active_tape() is None:
             return jax.lax.scan(body, carry, xs)
         n = jax.tree.leaves(xs)[0].shape[0]
         ys = []

@@ -104,6 +104,12 @@ class AdmissionConfig:
     overload_queue_per_slot: float = 2.0   # queue > f*slots => overloaded
     degrade_budget_frac: float = 0.5       # slo-aware budget shrink factor
     calibration_alpha: float = 0.4         # EWMA for wall/model seconds
+    faulty_pods: int = 0                   # pods masked out of the design
+    #                                        point: predictions price on
+    #                                        the degraded array, so the
+    #                                        slo-aware policy sheds load
+    #                                        proportionally to lost
+    #                                        capacity
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -112,6 +118,10 @@ class AdmissionConfig:
                 f"choose from {POLICIES}")
         if self.max_queue is not None and self.max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if not 0 <= self.faulty_pods < self.design[3]:
+            raise ValueError(
+                f"faulty_pods must be in [0, {self.design[3]}) for design "
+                f"{self.design}, got {self.faulty_pods}")
 
 
 class WaveLatencyPredictor:
@@ -126,10 +136,11 @@ class WaveLatencyPredictor:
     """
 
     def __init__(self, cfg, design: tuple = DEFAULT_DESIGN,
-                 tdp: float = 400.0):
+                 tdp: float = 400.0, faulty_pods: int = 0):
         self.cfg = cfg
         self.design = design
         self.tdp = tdp
+        self.faulty_pods = int(faulty_pods)
         self._cache: dict[tuple[int, int], float] = {}
 
     @staticmethod
@@ -142,7 +153,8 @@ class WaveLatencyPredictor:
         if hit is None:
             gemms = request_gemms(self.cfg, key[0], key[1])
             hit = self._cache[key] = predict_latency_s(
-                gemms, self.design, self.tdp)
+                gemms, self.design, self.tdp,
+                faulty_pods=self.faulty_pods)
         return hit
 
 

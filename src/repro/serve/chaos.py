@@ -46,6 +46,40 @@ class PermanentFault(RuntimeError):
     affected requests and keeps serving everyone else."""
 
 
+class SilentCorruption(RuntimeError):
+    """The PodGuard detected corruption it could not repair in-graph
+    (multi-element hit under abft, or any detection under the
+    detect-only probe mode). Retryable like TransientDeviceError —
+    recompute usually clears a transient flip — but retries exhausted
+    finalize the affected requests as ``rejected`` with terminal reason
+    ``sdc-uncorrectable`` instead of escalating to PermanentFault."""
+
+
+class NumericalFault(RuntimeError):
+    """Non-finite logits (NaN/Inf) surfaced in one or more lanes. Not
+    retryable: the forward pass is deterministic, so recompute returns
+    the same poison — the engine rejects exactly the affected lanes
+    (terminal reason ``non-finite-logits``) and keeps serving the rest.
+    ``lanes`` lists the offending slot indices."""
+
+    def __init__(self, lanes, where: str = "decode"):
+        self.lanes = list(lanes)
+        self.where = where
+        super().__init__(
+            f"non-finite logits in {where} lane(s) {self.lanes}")
+
+
+def check_lanes_finite(bad_lanes, where: str = "decode") -> None:
+    """Raise NumericalFault listing every flagged lane; no-op when all
+    lanes are finite. ``bad_lanes`` is an iterable of (lane, flagged)
+    pairs or a mapping lane -> flagged."""
+    if hasattr(bad_lanes, "items"):
+        bad_lanes = bad_lanes.items()
+    flagged = [lane for lane, bad in bad_lanes if bad]
+    if flagged:
+        raise NumericalFault(flagged, where)
+
+
 class VirtualClock:
     """Deterministic manual clock: callable like time.perf_counter, and
     sleeps advance it instead of blocking."""
@@ -75,6 +109,12 @@ class ChaosConfig:
     transient_tries: int = 1       # consecutive failures per faulty site
     service_seconds: float = 0.0   # nominal virtual seconds per call
                                    # (advanced on the engine clock; 0 = off)
+    p_sdc: float = 0.0             # silent-corruption probability per call
+                                   # (requires a guard-enabled engine)
+    sdc_elems: int = 1             # corrupted elements per hit (2+ defeats
+                                   # single-corruption ABFT -> uncorrectable)
+    sdc_magnitude: float = 1e4     # additive corruption magnitude
+    sdc_target: int = 0            # which guarded GEMM (trace index) is hit
 
 
 @dataclasses.dataclass
@@ -122,7 +162,9 @@ class FaultInjector:
         self.clock = clock
         self._calls: dict[str, int] = {}       # kind -> next call index
         self._pending_tries: dict[tuple[str, int], int] = {}
-        self.injected = {"faults": 0, "slow": 0, "calls": 0}
+        self._sdc_calls: dict[str, int] = {}   # kind -> next SDC site index
+        self._pending_sdc: dict[tuple[str, int], list] = {}
+        self.injected = {"faults": 0, "slow": 0, "calls": 0, "sdc": 0}
 
     def _draw(self, kind: str, index: int) -> random.Random:
         # seed with a STRING: random.Random hashes str/bytes stably
@@ -163,3 +205,35 @@ class FaultInjector:
         # attempt succeeds: the site is consumed
         del self._pending_tries[site]
         self._calls[kind] = site[1] + 1
+
+    def sdc_plan(self, kind: str) -> Optional[tuple[int, int, int]]:
+        """One attempt's silent-corruption verdict: an int plan
+        ``(target_gemm, draw_seed, n_elems)`` for the guarded GEMM path
+        (guard.inject_sdc), or None for a clean attempt.
+
+        Sites mirror the transient discipline: a site drawn corrupt
+        replays the SAME plan (same draw_seed) for ``transient_tries``
+        consecutive attempts — so the engine's recompute-and-retry sees
+        a persistent flip until the site heals — then the next attempt
+        runs clean and consumes the site. Unlike `before`, corruption is
+        discovered AFTER the call succeeds, so the site is keyed by its
+        own per-kind counter that only advances on a clean attempt."""
+        if self.config.p_sdc <= 0.0:
+            return None
+        idx = self._sdc_calls.get(kind, 0)
+        site = (kind, idx)
+        st = self._pending_sdc.get(site)
+        if st is None:                         # first attempt: draw fate
+            rng = self._draw(f"sdc-{kind}", idx)
+            hit = rng.random() < self.config.p_sdc
+            st = [self.config.transient_tries if hit else 0,
+                  rng.randrange(1 << 31)]
+            self._pending_sdc[site] = st
+        if st[0] > 0:
+            st[0] -= 1
+            self.injected["sdc"] += 1
+            return (self.config.sdc_target, st[1], self.config.sdc_elems)
+        # clean attempt: the site heals and is consumed
+        del self._pending_sdc[site]
+        self._sdc_calls[kind] = idx + 1
+        return None

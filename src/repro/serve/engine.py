@@ -67,14 +67,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.systolic_gemm.guard import GuardTape, as_guard
 from ..models.attention import KVCache
 from ..models.model import Model
 from ..models.transformer import MLACache
 from ..train.fault import Ewma
 from .admission import (AdmissionConfig, AdmissionController, NEW,
                         SLO_AWARE, ServeStalled, WaveLatencyPredictor)
-from .chaos import (FaultInjector, PermanentFault, SlowChunkDetector,
-                    TransientDeviceError)
+from .chaos import (FaultInjector, NumericalFault, PermanentFault,
+                    SilentCorruption, SlowChunkDetector,
+                    TransientDeviceError, check_lanes_finite)
 
 
 @dataclasses.dataclass
@@ -115,7 +117,7 @@ class ServeEngine:
                  decode_chunk: int = 8, prefill_buckets: bool = True,
                  min_bucket: int = 8, metrics=None, admission=None,
                  chaos=None, clock=None, max_retries: int = 3,
-                 backoff_s: float = 1e-3):
+                 backoff_s: float = 1e-3, guard=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -161,7 +163,8 @@ class ServeEngine:
         if isinstance(admission, AdmissionConfig):
             if admission.policy == SLO_AWARE:
                 predictor = WaveLatencyPredictor(
-                    model.cfg, admission.design, admission.tdp)
+                    model.cfg, admission.design, admission.tdp,
+                    faulty_pods=admission.faulty_pods)
             admission = AdmissionController(
                 admission, slots=slots, max_len=max_len,
                 predictor=predictor, metrics=metrics)
@@ -174,6 +177,21 @@ class ServeEngine:
         self._chaos: Optional[FaultInjector] = chaos
         self._slow_detect = SlowChunkDetector() if chaos is not None \
             else None
+        # SDC guard (kernels/systolic_gemm/guard.py): None/"off" keeps the
+        # hot loop bit-identical to an unguarded build; "probe"/"abft"
+        # wrap the jitted bucketed-prefill and fused-decode impls in a
+        # GuardTape so every pod GEMM is verified (and, under abft,
+        # single corruptions repaired in-graph). The exact-length prefill
+        # fallback stays outside the guard envelope (its model.prefill
+        # jit cache would skip the tape's trace-time hooks on a hit).
+        self._guard = as_guard(guard)
+        self._guard_on = self._guard.mode != "off"
+        self._sdc_plan = None         # armed per attempt by _device_call
+        self._sdc_magnitude = (self._chaos.config.sdc_magnitude
+                               if self._chaos is not None else 1e4)
+        # host-side guard tallies (mirrored to metrics when enabled)
+        self.guard_events = {"corrected": 0, "uncorrectable": 0,
+                             "non_finite": 0}
         self._chunk_cap: Optional[int] = None
         self.max_retries = max(0, int(max_retries))
         self.backoff_s = float(backoff_s)
@@ -195,22 +213,34 @@ class ServeEngine:
         """Run one device call through the fault boundary: the chaos
         injector may stall or raise per its seeded schedule; transient
         errors retry with exponential backoff up to `max_retries`, then
-        escalate to PermanentFault. Results are returned (never assigned
-        to engine state here), so a failed call leaves cache/lanes exactly
-        as they were. With chaos disarmed this is a plain call."""
-        if self._chaos is None:
+        escalate to PermanentFault. A guard-enabled `fn` additionally
+        syncs its verdict flags and raises SilentCorruption on detected-
+        but-uncorrected output — retried identically (recompute usually
+        clears a transient flip; the injector replays a corrupt site for
+        `transient_tries` attempts before it heals), but exhaustion
+        re-raises SilentCorruption so the caller finalizes the lanes as
+        ``sdc-uncorrectable`` instead of ``device-fault``. Results are
+        returned (never assigned to engine state here), so a failed call
+        leaves cache/lanes exactly as they were. With chaos disarmed and
+        guard off this is a plain call."""
+        if self._chaos is None and not self._guard_on:
             return fn()
         attempt = 0
         while True:
             try:
-                self._chaos.before(kind)
+                if self._chaos is not None:
+                    self._chaos.before(kind)
+                    self._sdc_plan = (self._chaos.sdc_plan(kind)
+                                      if self._guard_on else None)
                 return fn()
-            except TransientDeviceError as err:
+            except (TransientDeviceError, SilentCorruption) as err:
                 attempt += 1
                 if self.metrics is not None:
                     self.metrics.counter("serve.chaos.retries",
                                          kind=kind).inc()
                 if attempt > self.max_retries:
+                    if isinstance(err, SilentCorruption):
+                        raise
                     raise PermanentFault(
                         f"{kind} device call failed after {attempt} "
                         f"attempts: {err}") from err
@@ -220,7 +250,39 @@ class ServeEngine:
         for r in reqs:
             self.admission.reject(r, reason)
         if self.metrics is not None:
-            self.metrics.counter("serve.chaos.permanent_faults").inc()
+            name = ("serve.chaos.sdc_uncorrectable"
+                    if reason == "sdc-uncorrectable"
+                    else "serve.chaos.permanent_faults")
+            self.metrics.counter(name).inc()
+
+    def _sdc_arr(self):
+        """The attempt's injection plan as the traced int32[3] the guarded
+        impls consume; (-1, 0, 0) disarms (no chaos / clean draw)."""
+        plan = self._sdc_plan if self._sdc_plan is not None else (-1, 0, 0)
+        return jnp.asarray(plan, jnp.int32)
+
+    def _note_guard(self, corrected: int) -> None:
+        if corrected > 0:
+            self.guard_events["corrected"] += int(corrected)
+            if self.metrics is not None:
+                self.metrics.counter("serve.guard.corrected").inc(
+                    int(corrected))
+
+    def _shed_non_finite(self, pairs: list, where: str) -> None:
+        """Finalize lanes whose logits went NaN/Inf: the typed
+        NumericalFault is raised (check_lanes_finite) and caught at this
+        boundary — recompute would return the same poison, so there is no
+        retry; each affected request ends ``rejected`` with terminal
+        reason ``non-finite-logits`` and everyone else keeps serving."""
+        try:
+            check_lanes_finite([(lane, True) for _, lane in pairs], where)
+        except NumericalFault as err:
+            for (r, _), lane in zip(pairs, err.lanes):
+                self.admission.reject(r, "non-finite-logits")
+            self.guard_events["non_finite"] += len(pairs)
+            if self.metrics is not None:
+                self.metrics.counter("serve.numerical_faults",
+                                     where=where).inc(len(pairs))
 
     # -- telemetry ------------------------------------------------------
     def _span(self, name: str, cat: str, t_start: float, t_end: float,
@@ -342,14 +404,33 @@ class ServeEngine:
         self._buckets_seen.add(bucket)
         t_start = self._clock()
         try:
-            first, cache = self._device_call(
-                "prefill", lambda: self._prefill_fn(
-                    self.params, jnp.asarray(toks), self.cache,
-                    jnp.asarray(slot_ids), jnp.asarray(true_lens)))
+            if self._guard_on:
+                def call():
+                    first, cache, gstats = self._prefill_fn(
+                        self.params, jnp.asarray(toks), self.cache,
+                        jnp.asarray(slot_ids), jnp.asarray(true_lens),
+                        self._sdc_arr())
+                    flags = np.asarray(gstats)
+                    if int(flags[1]) > 0:
+                        raise SilentCorruption(
+                            f"prefill: {int(flags[1])} uncorrected "
+                            f"corruption(s) detected")
+                    return first, cache, int(flags[0])
+                first, cache, corrected = self._device_call("prefill", call)
+                self._note_guard(corrected)
+            else:
+                first, cache = self._device_call(
+                    "prefill", lambda: self._prefill_fn(
+                        self.params, jnp.asarray(toks), self.cache,
+                        jnp.asarray(slot_ids), jnp.asarray(true_lens)))
         except PermanentFault:
             # the whole group failed before any state was assigned: shed
             # the requests (terminal `rejected`), slots stay free
             self._reject_group(reqs, "device-fault")
+            return
+        except SilentCorruption:
+            self.guard_events["uncorrectable"] += 1
+            self._reject_group(reqs, "sdc-uncorrectable")
             return
         self.cache = cache
         first = np.asarray(first)
@@ -364,7 +445,15 @@ class ServeEngine:
                    rids=[r.rid for r in reqs])
         self._observe_prefill("bucketed", n_tokens, len(reqs),
                               t_end - t_start)
+        # a lane whose prefill logits were non-finite is encoded as a -1
+        # first token (impl below) — shed it before the slot is activated
+        poisoned = [(r, s) for g, (r, s) in enumerate(zip(reqs, slot_list))
+                    if first[g] < 0]
+        if poisoned:
+            self._shed_non_finite(poisoned, where="prefill")
         for g, (r, s) in enumerate(zip(reqs, slot_list)):
+            if first[g] < 0:
+                continue
             r.out.append(int(first[g]))
             self.active[s] = r
             self.positions[s] = len(r.prompt)
@@ -374,23 +463,37 @@ class ServeEngine:
             self._retire_if_full(s)
 
     def _prefill_batched_impl(self, params, tokens, big_cache, slot_ids,
-                              true_lens):
+                              true_lens, sdc=None):
         """One jitted prefill over a fixed [slots, bucket] token batch:
         forward, per-lane last-real-position logits, per-lane length fixup,
         and scatter of each real lane into its slot of the batched cache.
         Compiles once per bucket (tokens' trailing dim is the only varying
-        shape)."""
+        shape). With the guard on, the forward runs under a GuardTape
+        (every pod GEMM verified; `sdc` is the traced injection plan) and
+        the tape totals become a third output riding the existing sync.
+        A lane with non-finite last-position logits encodes its first
+        token as -1 — same arrays, same syncs as the healthy path."""
         lane_cache = self.model.init_cache(self.slots, self.max_len,
                                            src_len=self.src_len)
         # true_lens drives the stateful families' masked state updates
         # (SSM dt-masking + conv window, ring slot gather); attention-only
         # caches ignore it and rely on the _fix_lengths fixup below
-        logits, lane_cache = self.model.forward(params, {"tokens": tokens},
-                                                cache=lane_cache,
-                                                true_lens=true_lens)
+        if self._guard_on:
+            with GuardTape(self._guard, inject=sdc,
+                           magnitude=self._sdc_magnitude) as tape:
+                logits, lane_cache = self.model.forward(
+                    params, {"tokens": tokens}, cache=lane_cache,
+                    true_lens=true_lens)
+            gstats = jnp.stack(tape.totals())
+        else:
+            logits, lane_cache = self.model.forward(params, {"tokens": tokens},
+                                                    cache=lane_cache,
+                                                    true_lens=true_lens)
         idx = jnp.maximum(true_lens - 1, 0)
         last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
         first_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        first_tok = jnp.where(jnp.isfinite(last).all(axis=-1), first_tok,
+                              jnp.int32(-1))
         lane_cache = _fix_lengths(lane_cache, true_lens)
         cache = big_cache
         for g in range(self.slots):                   # static unroll
@@ -406,6 +509,8 @@ class ServeEngine:
                         s, axis=ax),
                     big),
                 cache, lane_cache, self._batch_axes)
+        if self._guard_on:
+            return first_tok, cache, gstats
         return first_tok, cache
 
     # -- exact-length prefill (SSM / ring / cross / MoE families) --------
@@ -429,8 +534,15 @@ class ServeEngine:
         except PermanentFault:
             self._reject_group([req], "device-fault")
             return
+        # fold the finiteness check into the one value already synced:
+        # a poisoned lane yields -1 and is shed before slot activation
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        first = int(jnp.where(jnp.isfinite(logits[0]).all(), first, -1))
+        if first < 0:
+            self._shed_non_finite([(req, slot)], where="prefill")
+            return
         self.cache = _write_lane(self.cache, lane_cache, slot)
-        req.out.append(int(jnp.argmax(logits[0])))
+        req.out.append(first)
         t_end = self._clock()
         if self.tracer is not None:
             self.tracer.on_prefill(req.rid, S, t=t_start - self._t0)
@@ -462,8 +574,8 @@ class ServeEngine:
             self.active[slot] = None
 
     # -- fused decode loop ------------------------------------------------
-    def _decode_chunk_impl(self, params, cache, toks, pos, bud, alive, *,
-                           n: int):
+    def _decode_chunk_impl(self, params, cache, toks, pos, bud, alive,
+                           sdc=None, *, n: int):
         """n fused decode steps as one lax.scan on device. Carries the
         batched cache + per-lane (token, position, budget, alive) vectors;
         emits the per-step greedy tokens and emit masks, plus the chunk's
@@ -473,28 +585,55 @@ class ServeEngine:
         A lane whose budget runs out (or that hits eos) drops out of the
         emit mask but keeps decoding inertly until the chunk ends — its
         slot is freed at the next admission boundary and prefill fully
-        rewrites the lane."""
+        rewrites the lane.
+
+        Always-on numerical guard: a lane whose logits go NaN/Inf stops
+        emitting at that step and sets its flag in the stats vector (the
+        flags ride the existing stats sync — zero new syncs; a healthy
+        lane's tokens are untouched). With the PodGuard on, each scan
+        step's model call runs under a GuardTape — the scan body traces
+        once, so an armed `sdc` plan corrupts its target GEMM every step
+        of the chunk — and the (corrected, uncorrected) totals join the
+        stats vector."""
         eos = self.eos_id
+        guard_on = self._guard_on
 
         def step(carry, _):
-            cache, toks, pos, bud, alive, emitted = carry
-            logits, cache = self.model.decode_step(params, toks, cache, pos)
+            cache, toks, pos, bud, alive, emitted, bad, gcorr, gunc = carry
+            if guard_on:
+                with GuardTape(self._guard, inject=sdc,
+                               magnitude=self._sdc_magnitude) as tape:
+                    logits, cache = self.model.decode_step(params, toks,
+                                                           cache, pos)
+                corr, unc = tape.totals()
+                gcorr, gunc = gcorr + corr, gunc + unc
+            else:
+                logits, cache = self.model.decode_step(params, toks, cache,
+                                                       pos)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            bad = bad | (alive & ~ok)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            emit = alive
+            emit = alive & ok
             toks = jnp.where(emit, nxt, toks)
             bud = bud - emit.astype(bud.dtype)
             done = bud <= 0
             if eos is not None:
                 done = done | (nxt == eos)
-            alive = alive & ~done
+            alive = alive & ~done & ok
             pos = pos + 1
             emitted = emitted + emit.sum(dtype=jnp.int32)
-            return (cache, toks, pos, bud, alive, emitted), (toks, emit)
+            return (cache, toks, pos, bud, alive, emitted, bad,
+                    gcorr, gunc), (toks, emit)
 
-        carry0 = (cache, toks, pos, bud, alive, jnp.int32(0))
-        (cache, _, _, _, alive, emitted), (seq, emits) = jax.lax.scan(
-            step, carry0, None, length=n)
-        stats = jnp.stack([emitted, alive.sum(dtype=jnp.int32)])
+        carry0 = (cache, toks, pos, bud, alive, jnp.int32(0),
+                  jnp.zeros(self.slots, bool), jnp.int32(0), jnp.int32(0))
+        (cache, _, _, _, alive, emitted, bad, gcorr, gunc), (seq, emits) = \
+            jax.lax.scan(step, carry0, None, length=n)
+        parts = [jnp.stack([emitted, alive.sum(dtype=jnp.int32)]),
+                 bad.astype(jnp.int32)]
+        if guard_on:
+            parts.append(jnp.stack([gcorr, gunc]))
+        stats = jnp.concatenate(parts)
         return cache, seq, emits, stats
 
     def _chunk_len(self, live: list[int]) -> int:
@@ -541,17 +680,42 @@ class ServeEngine:
         pos0 = self.positions.copy()
         t_start = self._clock()
         try:
-            cache, seq, emits, stats = self._device_call(
-                "decode", lambda: self._decode_fn(
-                    self.params, self.cache, jnp.asarray(toks),
-                    jnp.asarray(pos0), jnp.asarray(self.budgets),
-                    jnp.asarray(alive0), n=n))
+            if self._guard_on:
+                def call():
+                    cache, seq, emits, stats = self._decode_fn(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(pos0), jnp.asarray(self.budgets),
+                        jnp.asarray(alive0), self._sdc_arr(), n=n)
+                    flags = np.asarray(stats)
+                    if int(flags[-1]) > 0:
+                        raise SilentCorruption(
+                            f"decode chunk: {int(flags[-1])} uncorrected "
+                            f"corruption(s) detected")
+                    return cache, seq, emits, flags
+                cache, seq, emits, stats = self._device_call("decode", call)
+                self._note_guard(int(stats[-2]))
+            else:
+                cache, seq, emits, stats = self._device_call(
+                    "decode", lambda: self._decode_fn(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(pos0), jnp.asarray(self.budgets),
+                        jnp.asarray(alive0), n=n))
         except PermanentFault:
             # the chunk never ran (the injector raises before launch):
             # cache/positions are untouched. Shed the affected lanes and
             # free their slots so queued work keeps flowing.
             self._reject_group([self.active[i] for i in live],
                                "device-fault")
+            for i in live:
+                self.active[i] = None
+            return len(live)
+        except SilentCorruption:
+            # every retry recomputed the same corrupted chunk; no state
+            # was assigned, so the lanes are intact but unservable —
+            # finalize them as sdc-uncorrectable and free the slots
+            self.guard_events["uncorrectable"] += 1
+            self._reject_group([self.active[i] for i in live],
+                               "sdc-uncorrectable")
             for i in live:
                 self.active[i] = None
             return len(live)
@@ -600,6 +764,17 @@ class ServeEngine:
                             len(r.prompt), r.max_new_tokens),
                         t_end - r._admit_t)
                 self.admission.finish(r, now=t_end)
+                self.active[i] = None
+        # non-finite lanes (flags rode the stats sync): a poisoned lane
+        # stopped emitting at the bad step — it cannot have finished above
+        # (its budget never reached 0 on a masked emit) — shed it and
+        # free the slot; tokens emitted before detection are kept
+        poisoned = [(self.active[i], i) for i in live
+                    if self.active[i] is not None
+                    and stats[2 + i]]
+        if poisoned:
+            self._shed_non_finite(poisoned, where="decode")
+            for _, i in poisoned:
                 self.active[i] = None
         # deadline enforcement at the chunk's existing host sync (zero new
         # syncs): completion above wins over expiry in the same chunk

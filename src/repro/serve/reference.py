@@ -28,6 +28,7 @@ import numpy as np
 from ..models.model import Model
 from .admission import (AdmissionConfig, AdmissionController, SLO_AWARE,
                         ServeStalled, WaveLatencyPredictor)
+from .chaos import NumericalFault, check_lanes_finite
 from .engine import Request, _write_lane
 
 
@@ -62,17 +63,32 @@ class ReferenceEngine:
             admission = AdmissionConfig(policy=admission)
         if isinstance(admission, AdmissionConfig):
             predictor = WaveLatencyPredictor(
-                model.cfg, admission.design, admission.tdp) \
+                model.cfg, admission.design, admission.tdp,
+                faulty_pods=admission.faulty_pods) \
                 if admission.policy == SLO_AWARE else None
             admission = AdmissionController(
                 admission, slots=slots, max_len=max_len,
                 predictor=predictor)
         self.admission: AdmissionController = admission
+        self.guard_events = {"non_finite": 0}
 
     # -- request flow --------------------------------------------------
     def submit(self, req: Request) -> None:
         if self.admission.on_submit(self.queue, req, self._clock()):
             self.queue.append(req)
+
+    def _shed_non_finite(self, pairs: list, where: str) -> None:
+        """Finalize lanes whose logits went NaN/Inf: the typed
+        NumericalFault is raised (check_lanes_finite) and caught here —
+        the forward pass is deterministic so there is no retry; each
+        affected request ends ``rejected`` with terminal reason
+        ``non-finite-logits`` (same contract as ServeEngine)."""
+        try:
+            check_lanes_finite([(lane, True) for _, lane in pairs], where)
+        except NumericalFault:
+            for r, _ in pairs:
+                self.admission.reject(r, "non-finite-logits")
+            self.guard_events["non_finite"] += len(pairs)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.active):
@@ -102,6 +118,12 @@ class ReferenceEngine:
         for key, val in req.extras.items():
             batch[key] = jnp.asarray(val)
         logits, lane_cache = self._prefill(self.params, batch, lane_cache)
+        # non-finite guard: a poisoned prefill never activates the slot —
+        # recompute would return the same NaN/Inf, so the lane is rejected
+        # (the oracle syncs per request anyway, the extra check is free)
+        if not bool(jnp.isfinite(logits[0]).all()):
+            self._shed_non_finite([(req, slot)], where="prefill")
+            return
         self.cache = _write_lane(self.cache, lane_cache, slot)
         tok = int(jnp.argmax(logits[0]))
         req.out.append(tok)
@@ -136,9 +158,17 @@ class ReferenceEngine:
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(self.positions))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        fin = np.asarray(jnp.isfinite(logits).all(axis=-1))
         now = self._clock()
+        poisoned = [(self.active[i], i) for i in live if not fin[i]]
+        if poisoned:
+            self._shed_non_finite(poisoned, where="decode")
+            for _, i in poisoned:
+                self.active[i] = None
         for i in live:
             r = self.active[i]
+            if r is None:        # lane shed above: no token appended
+                continue
             tok = int(nxt[i])
             r.out.append(tok)
             self.positions[i] += 1

@@ -310,14 +310,18 @@ def plan_mixes(
 
 
 def _wave_levels(gemms, accel: AcceleratorConfig,
-                 interconnect: str) -> tuple[list[float], float]:
+                 interconnect: str,
+                 faulty_pods: int = 0) -> tuple[list[float], float]:
     """(per-level wave counts, service cycles per slice) of the analytical
     model — analyze_scalar's inner loop, exposed so the oracle can cumulate
     per-stream completion and un-truncated float totals (the batched path
-    keeps cycles as floats; SimResult.total_cycles is int-truncated)."""
+    keeps cycles as floats; SimResult.total_cycles is int-truncated).
+
+    faulty_pods shrinks the wave width only (survivor count); the fabric
+    spec stays full-machine, so latency is monotone in masked pods."""
     arr = accel.array
     r, c = arr.rows, arr.cols
-    eff_pods = accel.num_pods * icn_efficiency(interconnect)
+    eff_pods = (accel.num_pods - faulty_pods) * icn_efficiency(interconnect)
 
     level_slices: list[float] = []
     total_tiles = 0
@@ -337,14 +341,16 @@ def _wave_levels(gemms, accel: AcceleratorConfig,
 
 
 def _scalar_float_cycles(gemms, accel: AcceleratorConfig,
-                         interconnect: str) -> float:
+                         interconnect: str, faulty_pods: int = 0) -> float:
     """Un-truncated total cycles of the wave model (matches the batched
     engine's float total_cycles to rounding error)."""
-    level_slices, slice_cyc = _wave_levels(gemms, accel, interconnect)
+    level_slices, slice_cyc = _wave_levels(gemms, accel, interconnect,
+                                           faulty_pods=faulty_pods)
     return sum(level_slices) * slice_cyc
 
 
-def predict_latency_s(gemms, design: Design, tdp: float = 400.0) -> float:
+def predict_latency_s(gemms, design: Design, tdp: float = 400.0,
+                      faulty_pods: int = 0) -> float:
     """Wave-model service latency (seconds) of one GEMM stream on one
     design point — the per-request *prediction hook* the serving admission
     controller uses (serve/admission.py). Same math as a TenantReport's
@@ -352,10 +358,21 @@ def predict_latency_s(gemms, design: Design, tdp: float = 400.0) -> float:
     analytical wave model over the stream's levels, divided by the design
     clock. The admission controller feeds it `tenancy.trace.request_gemms`
     streams, so `slo_attainment`'s met/missed accounting finally drives
-    admit/shed decisions instead of only reporting them."""
+    admit/shed decisions instead of only reporting them.
+
+    ``faulty_pods`` prices the stream on the degraded array (that many
+    pods masked out of the wave width, core/simulator `faulty_pods`
+    semantics; the fabric spec and isopower normalization keep
+    full-machine geometry): latency rises monotonically as capacity
+    falls, so the slo-aware admission policy sheds load proportionally
+    to the lost pods."""
     rows, cols, icn, pods = design
+    if not 0 <= int(faulty_pods) < pods:
+        raise ValueError(f"faulty_pods must be in [0, {pods}), "
+                         f"got {faulty_pods}")
     accel = build_accel(rows, cols, icn, tdp, pods)
-    return _scalar_float_cycles(list(gemms), accel, icn) / \
+    return _scalar_float_cycles(list(gemms), accel, icn,
+                                faulty_pods=int(faulty_pods)) / \
         accel.array.clock_hz
 
 

@@ -7,14 +7,21 @@ Layout:  <dir>/step_<N>/
                                    is torn and ignored on restore)
 
 Fault-tolerance contract (train/fault.py): any host can die at any point;
-restore picks the newest COMMITTED step. Writes go to a temp dir + rename,
-so a crash mid-save never corrupts the previous checkpoint. On multi-host
-JAX each host saves its addressable shards; here (single host) that is the
-whole tree.
+restore picks the newest COMMITTED step. Writes go to a temp dir +
+os.replace, so a crash mid-save never corrupts the previous checkpoint.
+On multi-host JAX each host saves its addressable shards; here (single
+host) that is the whole tree.
+
+Integrity contract (the SDC story's at-rest leg): meta.json carries a
+sha256 per shard file, computed from the bytes on disk after the write.
+Restore re-hashes before np.load and raises the typed `CheckpointCorrupt`
+naming the damaged file on any mismatch or unreadable archive — a torn
+or bit-rotted shard can never be silently loaded into training state.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -23,6 +30,24 @@ from typing import Any
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A committed checkpoint failed integrity validation on restore.
+    `path` names the corrupt file; `detail` says how it failed."""
+
+    def __init__(self, path: str, detail: str):
+        self.path = path
+        self.detail = detail
+        super().__init__(f"corrupt checkpoint file {path}: {detail}")
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
@@ -49,12 +74,16 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, host: int = 0) -> str:
             if a.dtype.kind not in "biufc":   # bf16 etc: store raw bits
                 a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
             arrays[k] = a
-        np.savez(os.path.join(tmp, f"shard_{host}.npz"), **arrays)
+        shard = f"shard_{host}.npz"
+        np.savez(os.path.join(tmp, shard), **arrays)
         meta = {
             "step": step,
             "keys": [k for k, _ in leaves],
             "dtypes": dtypes,
             "shapes": {k: list(np.asarray(v).shape) for k, v in leaves},
+            # content checksum of the shard bytes actually on disk —
+            # validated by restore before np.load touches the archive
+            "checksums": {shard: _sha256_file(os.path.join(tmp, shard))},
         }
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
@@ -62,7 +91,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, host: int = 0) -> str:
             f.write("ok")
         if os.path.exists(final):
             shutil.rmtree(final)
-        os.rename(tmp, final)
+        os.replace(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -94,7 +123,25 @@ def restore_checkpoint(ckpt_dir: str, tree_like, step: int | None = None,
     import ml_dtypes
     with open(os.path.join(path, "meta.json")) as f:
         meta = _json.load(f)
-    data = np.load(os.path.join(path, f"shard_{host}.npz"))
+    shard = f"shard_{host}.npz"
+    shard_path = os.path.join(path, shard)
+    # integrity gate: re-hash the shard bytes against the digest recorded
+    # at save time (pre-checksum checkpoints carry no "checksums" key and
+    # skip the gate); only then hand the archive to np.load, and wrap any
+    # parse failure so the caller learns WHICH file is damaged
+    want_sum = meta.get("checksums", {}).get(shard)
+    if want_sum is not None:
+        got_sum = _sha256_file(shard_path)
+        if got_sum != want_sum:
+            raise CheckpointCorrupt(
+                shard_path, f"sha256 mismatch (expected {want_sum[:12]}…, "
+                            f"got {got_sum[:12]}…)")
+    try:
+        data = np.load(shard_path)
+    except FileNotFoundError:
+        raise
+    except Exception as err:
+        raise CheckpointCorrupt(shard_path, f"unreadable archive: {err}")
     leaves = _leaf_paths(tree_like)
     flat_restored = []
     for key, like in leaves:

@@ -1,0 +1,573 @@
+"""SDC-safe pod GEMMs and degraded-pod operation.
+
+Covers the robustness envelope end to end:
+
+  * ABFT checksum math: single-element corruptions detected, located to
+    the exact element (and tile), and repaired bit-tight; multi-element
+    hits stay uncorrectable; checksum-row hits leave the data untouched.
+  * Freivalds probe: a lone corruption is always caught; the adversarial
+    miss rate obeys the documented <= 2**-probes bound.
+  * PodGuard=off is bit-identical to the seed engine — tokens, jit cache
+    sizes, and host sync counts (the PR-7 zero-overhead discipline).
+  * Chaos SDC plans: deterministic, replayed across retries, then healed.
+  * Engine integration: injected SDC under abft is corrected and the
+    stream stays token-exact vs the oracle; exhausted retries terminate
+    as ``sdc-uncorrectable`` with zero slot leaks; NaN/Inf logits shed
+    exactly the poisoned lanes in BOTH engines.
+  * Degraded pods: retiling avoids dead banks/pods, the analytical
+    predictions are monotone in masked pods and track the slice
+    scheduler, and the admission predictor prices the degraded array.
+  * Checkpoint integrity: sha256-validated restore rejects torn shards
+    with a typed error naming the file.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # degrade gracefully: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_arch, reduced
+from repro.core.dse import build_accel
+from repro.core.scheduler import SliceScheduler
+from repro.core.simulator import (DesignVector, analyze, analyze_batch,
+                                  analyze_scalar, pack_workloads, simulate)
+from repro.core.tiling import GemmSpec, tile_workload
+from repro.kernels.systolic_gemm.guard import (GuardTape, PodGuard, abft_verify,
+                                               as_guard, augment_w, augment_x,
+                                               freivalds_detect, guarded_gemm,
+                                               inject_sdc, tile_of)
+from repro.models.model import Model
+from repro.serve.admission import AdmissionConfig, WaveLatencyPredictor
+from repro.serve.chaos import (ChaosConfig, FaultInjector, NumericalFault,
+                               VirtualClock, check_lanes_finite)
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.reference import ReferenceEngine
+from repro.train.checkpoint import (CheckpointCorrupt, restore_checkpoint,
+                                    save_checkpoint)
+
+
+def _setup(seed=0, **model_kw):
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg, **model_kw)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _reqs(n=4, max_new=6):
+    return [Request(rid=i, prompt=[1 + i, 2, 3 + i], max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=500)
+    assert all(s is None for s in eng.active), "slot leak"
+    return {r.rid: (r.state, r.reason, list(r.out)) for r in reqs}
+
+
+# --------------------------------------------------------------------------
+# ABFT math (property-based over shapes/dtypes/corruption sites)
+# --------------------------------------------------------------------------
+
+def _abft_case(m, k, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    w = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    c_aug = jnp.dot(augment_x(x).astype(jnp.float32),
+                    augment_w(w).astype(jnp.float32))
+    return x, w, c_aug
+
+
+@pytest.mark.tier1
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 24), k=st.integers(2, 32), n=st.integers(2, 24),
+       dt=st.sampled_from(["float32", "bfloat16"]),
+       seed=st.integers(0, 10_000))
+def test_abft_single_corruption_detected_located_corrected(m, k, n, dt,
+                                                           seed):
+    """100% detection of single-element corruptions, located to the right
+    element (hence the right tile), and repaired to the clean value."""
+    x, w, c_aug = _abft_case(m, k, n, jnp.dtype(dt), seed)
+    clean = np.asarray(c_aug)[:m, :n]
+    rng = np.random.default_rng(seed + 1)
+    r, cc = int(rng.integers(m)), int(rng.integers(n))
+    bad = c_aug.at[r, cc].add(1e4)
+    out, rep = abft_verify(bad, x, w, rtol=1.0 / 64)
+    assert int(rep["detected"]) == 1
+    assert int(rep["corrected"]) == 1 and int(rep["uncorrected"]) == 0
+    assert (int(rep["row"]), int(rep["col"])) == (r, cc)
+    assert tile_of(int(rep["row"]), int(rep["col"]), 8, 8) == (r // 8, cc // 8)
+    np.testing.assert_allclose(np.asarray(out), clean, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.tier1
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(3, 24), n=st.integers(3, 24), seed=st.integers(0, 9999))
+def test_abft_multi_corruption_stays_uncorrectable(m, n, seed):
+    """Two corruptions on distinct rows AND columns cannot be located as
+    one — detection holds, correction must refuse (engine recomputes)."""
+    x, w, c_aug = _abft_case(m, 16, n, jnp.float32, seed)
+    rng = np.random.default_rng(seed)
+    r0, c0 = int(rng.integers(m - 1)), int(rng.integers(n - 1))
+    bad = c_aug.at[r0, c0].add(1e4).at[r0 + 1, c0 + 1].add(-3e3)
+    _, rep = abft_verify(bad, x, w, rtol=1.0 / 64)
+    assert int(rep["detected"]) == 1
+    assert int(rep["corrected"]) == 0 and int(rep["uncorrected"]) == 1
+
+
+@pytest.mark.tier1
+def test_abft_clean_and_checksum_only_cases():
+    """No false positives on a clean product; a hit confined to the
+    checksum row leaves the (clean) data block untouched and corrected."""
+    x, w, c_aug = _abft_case(12, 16, 10, jnp.bfloat16, 3)
+    out, rep = abft_verify(c_aug, x, w, rtol=1.0 / 64)
+    assert int(rep["detected"]) == 0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(c_aug)[:12, :10])
+    bad = c_aug.at[12, 4].add(1e4)        # checksum row only
+    out2, rep2 = abft_verify(bad, x, w, rtol=1.0 / 64)
+    assert int(rep2["detected"]) == 1 and int(rep2["corrected"]) == 1
+    np.testing.assert_array_equal(np.asarray(out2),
+                                  np.asarray(c_aug)[:12, :10])
+
+
+@pytest.mark.tier1
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 20), k=st.integers(2, 24), n=st.integers(2, 20),
+       seed=st.integers(0, 9999))
+def test_probe_single_corruption_always_detected(m, k, n, seed):
+    """A lone corrupted element shifts its row residual by exactly
+    +-delta — one Freivalds probe cannot miss it."""
+    x, w, c_aug = _abft_case(m, k, n, jnp.float32, seed)
+    c = c_aug[:m, :n]
+    assert int(freivalds_detect(c, x, w, probes=1, seed=seed,
+                                rtol=1.0 / 64)) == 0
+    rng = np.random.default_rng(seed)
+    bad = c.at[int(rng.integers(m)), int(rng.integers(n))].add(1e4)
+    assert int(freivalds_detect(bad, x, w, probes=1, seed=seed,
+                                rtol=1.0 / 64)) == 1
+
+
+@pytest.mark.tier1
+def test_probe_adversarial_miss_rate_obeys_documented_bound():
+    """The +delta/-delta same-row pattern escapes one probe iff the
+    Rademacher vector agrees at both columns (p = 1/2 per probe); the
+    measured miss rate must respect <= 2**-probes (with sampling slack),
+    and extra probes must shrink it."""
+    x, w, c_aug = _abft_case(8, 16, 12, jnp.float32, 0)
+    c = c_aug[:8, :12]
+    bad = c.at[3, 2].add(1e4).at[3, 9].add(-1e4)
+    trials = 200
+    misses = {p: sum(
+        int(freivalds_detect(bad, x, w, probes=p, seed=s,
+                             rtol=1.0 / 64)) == 0
+        for s in range(trials)) / trials for p in (1, 3)}
+    assert misses[1] <= 0.5 + 0.12          # bound 2**-1 plus sampling slack
+    assert misses[3] <= 0.125 + 0.08        # bound 2**-3 plus sampling slack
+    assert misses[3] < misses[1]
+
+
+@pytest.mark.tier1
+def test_guarded_gemm_matches_fused_epilogue_and_rejects_int8():
+    """Standalone guarded GEMM (abft + probe) reproduces the fused-kernel
+    epilogue output exactly on clean inputs; int8 + abft is refused."""
+    from repro.kernels.systolic_gemm.ops import fused_lane_gemm
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((16, 12)), jnp.float32)
+    scale = jnp.asarray(rng.standard_normal(12), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(12), jnp.float32)
+    raw = fused_lane_gemm(x, w, interpret=True)
+    fused = fused_lane_gemm(x, w, scale, bias, activation="gelu",
+                            interpret=True)
+    for mode in ("abft", "probe"):
+        # identity epilogue: the raw accumulator must survive the guard
+        # exactly (checksums never perturb the data block)
+        np.testing.assert_array_equal(
+            np.asarray(guarded_gemm(x, w, guard=PodGuard(mode=mode),
+                                    interpret=True)),
+            np.asarray(raw))
+        # full epilogue: same math, but the fused kernel applies it under
+        # jit while the guard applies it eagerly -> ulp-level differences
+        out = guarded_gemm(x, w, scale, bias, guard=PodGuard(mode=mode),
+                           activation="gelu", interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(fused),
+                                   rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="int8"):
+        guarded_gemm(x.astype(jnp.int8), w.astype(jnp.int8),
+                     guard=PodGuard(mode="abft"), interpret=True)
+
+
+@pytest.mark.tier1
+def test_guard_config_validation():
+    assert as_guard(None).mode == "off"
+    assert as_guard("abft").mode == "abft"
+    assert as_guard(PodGuard(mode="probe")).mode == "probe"
+    with pytest.raises(ValueError):
+        PodGuard(mode="bogus")
+    with pytest.raises(ValueError):
+        PodGuard(rtol=2.0)
+    with pytest.raises(TypeError):
+        as_guard(42)
+
+
+@pytest.mark.tier1
+def test_inject_sdc_hits_distinct_rows_and_cols():
+    """n_elems=2 lands on distinct rows AND columns — the pattern that
+    provably defeats single-corruption ABFT location."""
+    c = jnp.zeros((6, 5), jnp.float32)
+    out = np.asarray(inject_sdc(c, 0, (0, 123, 2), 1e4, 6, 5))
+    rows, cols = np.nonzero(out)
+    assert len(rows) == 2
+    assert rows[0] != rows[1] and cols[0] != cols[1]
+    # disarmed plans and index misses are exact no-ops
+    assert not np.asarray(inject_sdc(c, 0, (-1, 123, 2), 1e4, 6, 5)).any()
+    assert not np.asarray(inject_sdc(c, 1, (0, 123, 2), 1e4, 6, 5)).any()
+
+
+# --------------------------------------------------------------------------
+# chaos SDC plans
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_sdc_plan_deterministic_replay_then_heal():
+    """A corrupt site replays the SAME plan for transient_tries attempts,
+    then heals; the schedule is a pure function of the seed."""
+    cfg = ChaosConfig(seed=5, p_sdc=1.0, sdc_elems=2, sdc_target=1,
+                      transient_tries=2)
+    a, b = FaultInjector(cfg), FaultInjector(cfg)
+    p1, p2, p3 = (a.sdc_plan("decode") for _ in range(3))
+    assert p1 == p2 and p1 is not None          # replayed verbatim
+    assert p1[0] == 1 and p1[2] == 2
+    assert p3 is None                           # healed, site consumed
+    assert a.injected["sdc"] == 2
+    assert [b.sdc_plan("decode") for _ in range(3)] == [p1, p2, p3]
+    # p_sdc=0 short-circuits
+    off = FaultInjector(ChaosConfig(seed=5))
+    assert off.sdc_plan("decode") is None and off.injected["sdc"] == 0
+
+
+# --------------------------------------------------------------------------
+# PodGuard=off bit-identity (the PR-7 zero-overhead discipline)
+# --------------------------------------------------------------------------
+
+class _SyncCountingNumpy:
+    """numpy proxy counting device->host materializations (np.asarray on a
+    jax.Array) — the engine's host-sync accounting unit."""
+
+    def __init__(self, real):
+        self._real = real
+        self.syncs = 0
+
+    def asarray(self, x, *a, **k):
+        if isinstance(x, jax.Array):
+            self.syncs += 1
+        return self._real.asarray(x, *a, **k)
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+@pytest.mark.tier1
+def test_guard_off_bit_identical_to_seed_engine(monkeypatch):
+    """guard='off' must change NOTHING: same tokens, same jit cache
+    sizes, same host sync count as an engine that never heard of guards."""
+    import repro.serve.engine as engine_mod
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (5, 9, 17, 12)]
+
+    runs = {}
+    for name, kw in (("bare", {}), ("off", {"guard": "off"})):
+        proxy = _SyncCountingNumpy(np)
+        monkeypatch.setattr(engine_mod, "np", proxy)
+        eng = ServeEngine(model, params, slots=2, max_len=64, **kw)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion(max_steps=500)
+        runs[name] = ({r.rid: r.out for r in reqs},
+                      eng._prefill_fn._cache_size(),
+                      eng._decode_fn._cache_size(),
+                      proxy.syncs)
+        monkeypatch.setattr(engine_mod, "np", np)
+    assert runs["off"] == runs["bare"]
+
+
+# --------------------------------------------------------------------------
+# non-finite logits: typed fault, exact lanes shed, both engines
+# --------------------------------------------------------------------------
+
+class _PoisonModel:
+    """Delegates to the real model; turns logits to NaN for every lane
+    whose trigger token shows up (first prompt token in prefill, current
+    token in decode) — a deterministic stand-in for numerical blowup."""
+
+    def __init__(self, inner, bad_tok, where):
+        self._inner, self._bad, self._where = inner, int(bad_tok), where
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def forward(self, params, batch, cache=None, positions=None,
+                true_lens=None):
+        logits, c = self._inner.forward(params, batch, cache, positions,
+                                        true_lens)
+        if self._where == "prefill":
+            hit = batch["tokens"][:, 0] == self._bad
+            logits = jnp.where(hit[:, None, None], jnp.nan, logits)
+        return logits, c
+
+    def prefill(self, params, batch, cache):
+        logits, c = self._inner.prefill(params, batch, cache)
+        if self._where == "prefill":
+            hit = batch["tokens"][:, 0] == self._bad
+            logits = jnp.where(hit[:, None], jnp.nan, logits)
+        return logits, c
+
+    def decode_step(self, params, toks, cache, positions):
+        logits, c = self._inner.decode_step(params, toks, cache, positions)
+        if self._where == "decode":
+            logits = jnp.where((toks == self._bad)[:, None], jnp.nan,
+                               logits)
+        return logits, c
+
+
+@pytest.mark.tier1
+def test_check_lanes_finite_raises_typed_fault():
+    check_lanes_finite([(0, False), (1, False)])          # no-op
+    with pytest.raises(NumericalFault) as exc:
+        check_lanes_finite({0: False, 2: True, 3: True}, where="prefill")
+    assert exc.value.lanes == [2, 3] and exc.value.where == "prefill"
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("engine_cls", [ServeEngine, ReferenceEngine])
+def test_non_finite_prefill_sheds_only_poisoned_lane(engine_cls):
+    """A NaN prefill rejects that request (non-finite-logits) and leaves
+    every other lane serving normally — in both engines."""
+    cfg, model, params = _setup()
+    poisoned = _PoisonModel(model, bad_tok=2, where="prefill")  # rid 1
+    states = _drain(engine_cls(poisoned, params, slots=4, max_len=64),
+                    _reqs())
+    assert states[1][:2] == ("rejected", "non-finite-logits")
+    assert all(st == "done" for rid, (st, _, _) in states.items()
+               if rid != 1)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("engine_cls", [ServeEngine, ReferenceEngine])
+def test_non_finite_decode_sheds_only_poisoned_lane(engine_cls):
+    """Mid-decode NaN sheds exactly the poisoned lane; its emitted tokens
+    stop at the poison point and no slot leaks."""
+    cfg, model, params = _setup()
+    ref = ReferenceEngine(model, params, slots=4, max_len=64)
+    clean = _drain(ref, _reqs())
+    bad_tok = clean[2][2][1]          # rid 2's 2nd token triggers mid-decode
+    poisoned = _PoisonModel(model, bad_tok=bad_tok, where="decode")
+    eng = engine_cls(poisoned, params, slots=4, max_len=64)
+    states = _drain(eng, _reqs())
+    shed = [rid for rid, (s, why, _) in states.items()
+            if (s, why) == ("rejected", "non-finite-logits")]
+    assert shed, states
+    assert eng.guard_events["non_finite"] == len(shed)
+    assert any(st == "done" for st, _, _ in states.values())
+
+
+# --------------------------------------------------------------------------
+# engine e2e: SDC under guard (pallas path; slow)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pallas_parts():
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg, use_pallas=True)
+    params = model.init(jax.random.PRNGKey(0))
+    ref = ReferenceEngine(Model(cfg), params, slots=4, max_len=64)
+    oracle = _drain(ref, _reqs())
+    return cfg, model, params, oracle
+
+
+@pytest.mark.slow
+def test_abft_corrects_injected_sdc_token_exact(pallas_parts):
+    """Single-element SDC under abft: detected, corrected in-graph, and
+    the stream stays token-exact against the clean oracle."""
+    cfg, model, params, oracle = pallas_parts
+    chaos = ChaosConfig(seed=7, p_sdc=0.6, sdc_elems=1, transient_tries=1)
+    eng = ServeEngine(model, params, slots=4, max_len=64, guard="abft",
+                      chaos=chaos, clock=VirtualClock(), max_retries=3)
+    states = _drain(eng, _reqs())
+    assert eng._chaos.injected["sdc"] > 0, "chaos never armed a plan"
+    assert eng.guard_events["corrected"] > 0
+    assert eng.guard_events["uncorrectable"] == 0
+    for rid, (state, _, out) in states.items():
+        assert state == "done" and out == oracle[rid][2]
+
+
+@pytest.mark.slow
+def test_multi_element_sdc_exhausts_retries_no_slot_leak(pallas_parts):
+    """2-element corruption defeats ABFT location on every retry: the
+    affected requests end ``sdc-uncorrectable`` and no slot leaks."""
+    cfg, model, params, _ = pallas_parts
+    chaos = ChaosConfig(seed=7, p_sdc=0.9, sdc_elems=2, transient_tries=10)
+    eng = ServeEngine(model, params, slots=4, max_len=64, guard="abft",
+                      chaos=chaos, clock=VirtualClock(), max_retries=1)
+    states = _drain(eng, _reqs())
+    rejected = [rid for rid, (s, why, _) in states.items()
+                if (s, why) == ("rejected", "sdc-uncorrectable")]
+    assert rejected, states
+    assert eng.guard_events["uncorrectable"] > 0
+
+
+@pytest.mark.slow
+def test_probe_detects_then_retry_heals_token_exact(pallas_parts):
+    """Detect-only probe mode: corruption triggers recompute-and-retry;
+    the site heals within the retry budget and tokens stay exact."""
+    cfg, model, params, oracle = pallas_parts
+    chaos = ChaosConfig(seed=7, p_sdc=0.6, sdc_elems=1, transient_tries=1)
+    eng = ServeEngine(model, params, slots=4, max_len=64, guard="probe",
+                      chaos=chaos, clock=VirtualClock(), max_retries=3)
+    states = _drain(eng, _reqs())
+    assert eng._chaos.injected["sdc"] > 0
+    assert eng.guard_events["uncorrectable"] == 0
+    for rid, (state, _, out) in states.items():
+        assert state == "done" and out == oracle[rid][2]
+
+
+# --------------------------------------------------------------------------
+# degraded pods: retiling, scheduling, predictions, admission pricing
+# --------------------------------------------------------------------------
+
+_GEMMS = [GemmSpec(128, 256, 512, gemm_id=0),
+          GemmSpec(128, 512, 256, gemm_id=1, depends_on=(0,))]
+
+
+@pytest.mark.tier1
+def test_tiling_masks_faulty_banks_and_empty_mask_is_seed():
+    accel = build_accel(32, 32, "butterfly-2", 400.0, 16)
+    seed = tile_workload(_GEMMS, accel.array, num_banks=16)
+    same = tile_workload(_GEMMS, accel.array, num_banks=16, faulty_banks=())
+    assert seed.ops == same.ops
+    masked = tile_workload(_GEMMS, accel.array, num_banks=16,
+                           faulty_banks=(0, 3))
+    used = {b for op in masked.ops
+            for b in (op.x_bank, op.w_bank, op.p_bank)}
+    assert not used & {0, 3}
+    assert len(masked.ops) == len(seed.ops)     # same tile count, remapped
+    with pytest.raises(ValueError):
+        tile_workload(_GEMMS, accel.array, num_banks=4,
+                      faulty_banks=(0, 1, 2, 3))
+
+
+@pytest.mark.tier1
+def test_scheduler_places_only_on_healthy_pods():
+    accel = build_accel(32, 32, "butterfly-2", 400.0, 16)
+    graph = tile_workload(_GEMMS, accel.array, num_banks=16,
+                          faulty_banks=(1, 2))
+    sched = SliceScheduler(16, 32, accel.array.pipeline_latency,
+                           faulty_pods=(1, 2)).schedule(graph)
+    assert len(sched.assignments) == len(graph.ops)
+    assert not {p for _, p in sched.assignments.values()} & {1, 2}
+    with pytest.raises(ValueError):
+        SliceScheduler(4, 32, 4, faulty_pods=(0, 1, 2, 3))
+    with pytest.raises(ValueError):
+        SliceScheduler(4, 32, 4, faulty_pods=(7,))
+
+
+@pytest.mark.tier1
+def test_degraded_predictions_monotone_and_match_scheduler():
+    """analyze/analyze_batch latency rises monotonically as pods die, the
+    batched and scalar paths agree, and the analytical prediction stays
+    within the calibrated band of the real slice scheduler."""
+    accel = build_accel(32, 32, "butterfly-2", 400.0, 16)
+    cycles = [analyze(_GEMMS, accel, faulty_pods=f).total_cycles
+              for f in range(0, 15)]
+    assert all(b >= a for a, b in zip(cycles, cycles[1:]))
+    assert cycles[-1] > cycles[0]
+
+    packed = pack_workloads({"wl": _GEMMS})
+    design = DesignVector.from_accel(accel).repeat(4)
+    batch = analyze_batch(packed, design,
+                          faulty_pods=np.array([0, 2, 6, 12]))
+    col = batch.total_cycles[:, 0]
+    assert all(b >= a for a, b in zip(col, col[1:]))
+    for p, f in enumerate((0, 2, 6, 12)):
+        sc = analyze_scalar(_GEMMS, accel, faulty_pods=f)
+        assert abs(sc.total_cycles - int(col[p])) <= 1
+
+    for f in (0, 4, 8):
+        pred = analyze(_GEMMS, accel, faulty_pods=f).total_cycles
+        real = simulate(_GEMMS, accel, faulty_pods=f).total_cycles
+        assert 0.5 <= pred / real <= 2.0, (f, pred, real)
+
+    with pytest.raises(ValueError):
+        analyze_batch(packed, DesignVector.from_accel(accel),
+                      faulty_pods=16)
+
+
+@pytest.mark.tier1
+def test_admission_predictor_prices_degraded_array():
+    """The slo-aware predictor sees longer service on a degraded design,
+    so admission sheds load proportionally to lost capacity."""
+    cfg = reduced(get_arch("granite-8b"))
+    design = (32, 32, "butterfly-2", 16)
+    healthy = WaveLatencyPredictor(cfg, design, faulty_pods=0)
+    degraded = WaveLatencyPredictor(cfg, design, faulty_pods=12)
+    t0 = healthy.model_seconds(64, 32)
+    t1 = degraded.model_seconds(64, 32)
+    assert t1 > t0
+    with pytest.raises(ValueError):
+        AdmissionConfig(design=design, faulty_pods=16)
+    AdmissionConfig(design=design, faulty_pods=3)       # in range: fine
+
+
+# --------------------------------------------------------------------------
+# checkpoint integrity
+# --------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_checkpoint_checksum_detects_truncated_write(tmp_path):
+    """Atomic save records a sha256 per shard; restore re-hashes before
+    np.load and raises the typed error naming the torn file."""
+    import json
+    tree = {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+            "b": jnp.ones(4, jnp.float32)}
+    d = str(tmp_path)
+    path = save_checkpoint(d, 3, tree)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    assert "shard_0.npz" in meta["checksums"]
+
+    out, step = restore_checkpoint(d, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["b"]), np.ones(4))
+
+    shard = os.path.join(path, "shard_0.npz")
+    with open(shard, "rb") as f:
+        raw = f.read()
+    with open(shard, "wb") as f:                 # simulate a torn write
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(CheckpointCorrupt) as exc:
+        restore_checkpoint(d, tree)
+    assert "shard_0.npz" in exc.value.path
+    assert "sha256" in exc.value.detail
+
+    # pre-checksum checkpoints (no "checksums" key) still restore
+    with open(shard, "wb") as f:
+        f.write(raw)
+    meta.pop("checksums")
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    out2, _ = restore_checkpoint(d, tree)
+    np.testing.assert_array_equal(
+        np.asarray(out2["w"], np.float32),
+        np.asarray(tree["w"], np.float32))
