@@ -480,6 +480,142 @@ def _sdc_phase(lines):
     return lines
 
 
+def _paged_phase(lines):
+    """Paged-KV rows (serve/paging.py + ServeEngine(paged=True)).
+
+    paged_kv_bytes_* — device KV footprint vs the dense slots x max_len
+    reservation at a low-occupancy and a near-full workload. The mapped
+    bytes must hold the acceptance bound (<= 1.25x live tokens x
+    per-token bytes, page-granularity slack) at every sampled quantum —
+    violated bounds raise, so `--check` gates them.
+    paged_decode — steady-state decode tokens/s, paged vs dense engine on
+    the same workload (warm + min-of-2). The gather indirection rides the
+    fused chunk, so the paged rate must stay within 2x of dense wall
+    clock even on this interpret-mode box.
+    paged_recycle — deterministic virtual-time overload with more
+    requests than lanes: counts in-chunk lane handoffs and asserts the
+    engine never runs an idle chunk while work is pending (the recycle
+    latency claim: a freed lane is re-armed at the SAME chunk sync).
+    """
+    from repro.serve.chaos import ChaosConfig, VirtualClock
+    from repro.serve.engine import ServeEngine
+    cfg, model, params = _mk_engine_parts()
+
+    # -- KV footprint at low / high occupancy --------------------------
+    for tag, max_len, plens, max_new in (
+            ("low_occupancy", 128, [16, 18, 20, 22], pick(5, 3)),
+            ("full_occupancy", 64, [49, 52, 47, 50], pick(13, 5))):
+        eng = ServeEngine(model, params, slots=4, max_len=max_len,
+                          decode_chunk=4, paged=True, page_size=8)
+        reqs = _reset_requests(cfg, plens, np.random.default_rng(3),
+                               max_new)
+        for r in reqs:
+            eng.submit(r)
+        eng._admit()                     # sample the post-prefill state
+        peak = None
+        for _ in range(500):
+            s = eng.paged_kv_stats()
+            if not s["live_tokens"]:
+                if not eng.queue and not any(eng.active):
+                    break
+                eng.step()
+                continue
+            if s["mapped_bytes"] > 1.25 * s["live_tokens"] \
+                    * s["kv_bytes_per_token"]:
+                raise RuntimeError(f"paged KV bound violated ({tag}): {s}")
+            if s["mapped_bytes"] > s["dense_bytes"]:
+                raise RuntimeError(f"paged KV exceeds dense ({tag}): {s}")
+            if peak is None or s["mapped_bytes"] > peak["mapped_bytes"]:
+                peak = s
+            if not eng.queue and not any(eng.active):
+                break
+            eng.step()
+        if not all(r.state == "done" for r in reqs):
+            raise RuntimeError(f"paged run left unfinished requests ({tag})")
+        eng._pool.assert_drained()
+        lines.append(
+            f"serving/paged_kv_bytes_{tag},0,"
+            f"mapped_kib={peak['mapped_bytes'] / 1024:.0f};"
+            f"dense_kib={peak['dense_bytes'] / 1024:.0f};"
+            f"dense_frac={peak['mapped_bytes'] / peak['dense_bytes']:.2f};"
+            f"occupancy={peak['occupancy']:.2f};"
+            f"live_tokens={peak['live_tokens']};"
+            f"mapped_tokens={peak['mapped_tokens']};"
+            f"kv_bytes_per_token={peak['kv_bytes_per_token']}")
+
+    # -- steady-state decode: paged vs dense ---------------------------
+    max_new = pick(33, 5)
+    lengths = [8, 8, 8, 8]
+
+    def decode_run(engine):
+        reqs = _reset_requests(cfg, lengths, np.random.default_rng(0),
+                               max_new)
+        for r in reqs:
+            engine.submit(r)
+        engine._admit()
+        t0 = time.perf_counter()
+        while any(engine.active):
+            engine.step()
+        dt = time.perf_counter() - t0
+        assert all(r.done and len(r.out) == max_new for r in reqs)
+        return dt
+
+    rates = {}
+    for name, kw in (("dense", {}), ("paged", dict(paged=True,
+                                                   page_size=8))):
+        engine = ServeEngine(model, params, slots=4, max_len=64,
+                             decode_chunk=16, **kw)
+        decode_run(engine)                           # warm (compile)
+        dt = min(decode_run(engine), decode_run(engine))
+        toks = 4 * (max_new - 1)
+        rates[name] = toks / dt
+    ratio = rates["paged"] / rates["dense"]
+    if ratio < 0.5:
+        raise RuntimeError(
+            f"paged decode fell to {ratio:.2f}x of dense — the page "
+            f"gather must ride the fused chunk, not re-materialize it")
+    lines.append(
+        f"serving/paged_decode,0,"
+        f"paged_tok_s={rates['paged']:.0f};dense_tok_s={rates['dense']:.0f};"
+        f"paged_over_dense={ratio:.2f}x")
+
+    # -- in-chunk lane recycling (deterministic, virtual time) ---------
+    eng = ServeEngine(model, params, slots=2, max_len=32, decode_chunk=4,
+                      clock=VirtualClock(), paged=True, page_size=8,
+                      chaos=ChaosConfig(seed=0, service_seconds=0.01))
+    n_req = pick(8, 5)
+    reqs = _reset_requests(cfg, [6] * n_req, np.random.default_rng(1),
+                           pick(6, 4))
+    for r in reqs:
+        eng.submit(r)
+    idle_chunks = 0
+    chunks = 0
+    for _ in range(2000):
+        if not eng.queue and not any(eng.active):
+            break
+        live = eng.step()
+        chunks += 1
+        if live == 0:
+            idle_chunks += 1
+    if not all(r.state == "done" for r in reqs):
+        raise RuntimeError("recycle run left unfinished requests")
+    if idle_chunks:
+        raise RuntimeError(
+            f"{idle_chunks} idle chunks with work pending: mid-chunk "
+            f"retires must hand lanes over at the same sync")
+    if eng.recycled < n_req - eng.slots:
+        raise RuntimeError(
+            f"expected >= {n_req - eng.slots} in-chunk recycles, got "
+            f"{eng.recycled}")
+    eng._pool.assert_drained()
+    lines.append(
+        f"serving/paged_recycle,0,"
+        f"offered={n_req};slots={eng.slots};recycled={eng.recycled};"
+        f"chunks={chunks};idle_chunks=0;"
+        f"recycle_rate={eng.recycled / chunks:.2f}")
+    return lines
+
+
 def bench() -> list[str]:
     lines: list[str] = []
     _prefill_phase(lines)
@@ -488,4 +624,5 @@ def bench() -> list[str]:
     _autotune_phase(lines)
     _admission_phase(lines)
     _sdc_phase(lines)
+    _paged_phase(lines)
     return lines

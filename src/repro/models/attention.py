@@ -359,6 +359,131 @@ jax.tree_util.register_dataclass(
     RingKVCache, data_fields=["k", "v", "length"], meta_fields=[])
 
 
+@dataclasses.dataclass
+class PagedKVCache:
+    """Pooled (paged) KV cache for serving: device memory scales with the
+    pages actually mapped, not `slots x max_len`.
+
+    `k`/`v`: [(L,) n_pages, page_size, H, D] — a page pool shared by every
+    lane. `page_table`: [(L,) B, P_max] int32, position-ordered: entry j of
+    lane b names the pool page holding that lane's tokens
+    [j*page_size, (j+1)*page_size). The sentinel id `n_pages` (one PAST the
+    pool) marks an unmapped entry — writes routed through it fall out of
+    bounds and are dropped (`mode="drop"`; the sentinel must be positive
+    because negative indices would wrap) and gathers mask it to an invalid
+    position. `length`: [(L,) B] filled tokens per lane, same semantics as
+    KVCache.length.
+
+    Which pages a lane owns is decided host-side (serve/paging.PagePool)
+    at the engine's existing per-chunk sync; the device only ever reads
+    the table it was handed, so a lane can never reach another lane's
+    pages: its table simply doesn't contain them. Stacked (scanned-layer)
+    caches broadcast the same table across the leading L axis so the
+    serving layer scan's `dynamic_index_in_dim(leaf, i, 0)` slicing works
+    unchanged.
+    """
+    k: jax.Array
+    v: jax.Array
+    page_table: jax.Array   # [(L,) B, P_max] int32; n_pages = unmapped
+    length: jax.Array       # [(L,) B] int32
+
+    @staticmethod
+    def zeros(batch, max_len, n_kv, head_dim, *, n_pages, page_size,
+              dtype=jnp.bfloat16, layers: int | None = None):
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        p_max = max_len // page_size
+        shape = (n_pages, page_size, n_kv, head_dim)
+        tshape: tuple[int, ...] = (batch, p_max)
+        lshape: tuple[int, ...] = (batch,)
+        if layers:
+            shape = (layers,) + shape
+            tshape = (layers,) + tshape
+            lshape = (layers, batch)
+        return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                            jnp.full(tshape, n_pages, jnp.int32),
+                            jnp.zeros(lshape, jnp.int32))
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[-4]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-3]
+
+    def append(self, k_new, v_new):
+        """Decode-step write: [B, 1, H, D] lands at per-lane position
+        `length` inside the page the table maps it to. A lane whose
+        position runs past its mapped pages (an empty slot, or a
+        mid-chunk-dead lane decoding inertly) resolves to the sentinel
+        page and the write is dropped — never another lane's memory."""
+        ps = self.page_size
+        idx = self.length                             # [B]
+        page = jnp.take_along_axis(
+            self.page_table, (idx // ps)[:, None], axis=1,
+            mode="fill", fill_value=self.n_pages)[:, 0]   # [B]
+        slot = idx % ps
+        k = self.k.at[page, slot].set(k_new[:, 0].astype(self.k.dtype),
+                                      mode="drop")
+        v = self.v.at[page, slot].set(v_new[:, 0].astype(self.v.dtype),
+                                      mode="drop")
+        return PagedKVCache(k, v, self.page_table, idx + k_new.shape[1])
+
+    def flat_view(self):
+        """Gather-by-page-table: dense [B, P_max*page_size, H, D] views of
+        k/v plus absolute positions [B, P_max*page_size] (-1 on unmapped
+        pages and past-length slots, the decode_attention mask contract).
+        The gathered view is position-ordered, so downstream attention is
+        bit-identical to the dense KVCache path."""
+        pt = self.page_table                          # [B, P]
+        B, P = pt.shape
+        ps = self.page_size
+        safe = jnp.minimum(pt, self.n_pages - 1)
+        k = self.k[safe].reshape(B, P * ps, *self.k.shape[-2:])
+        v = self.v[safe].reshape(B, P * ps, *self.v.shape[-2:])
+        t = jnp.arange(P * ps)[None, :]
+        mapped = jnp.repeat(pt < self.n_pages, ps, axis=1)
+        k_pos = jnp.where(mapped & (t < self.length[:, None]), t, -1)
+        return k, v, k_pos
+
+    def scatter_prefill(self, lane, dest_pages, slot_ids, true_lens):
+        """Page-granular scatter of a dense transient prefill cache into
+        the pool. `lane` is a KVCache over the full lane batch
+        ([(L,) B, S, H, D], S = P_max*page_size); `dest_pages` [B, P_max]
+        maps lane g's page j to a pool page (sentinel entries — pad lanes,
+        pages past the prompt — drop). `slot_ids` [B] routes lane g's true
+        length to its engine slot (negative = pad lane, dropped). Garbage
+        past a lane's true length inside its last mapped page is masked by
+        `length` at gather time and overwritten by decode appends."""
+        ps = self.page_size
+        P = self.page_table.shape[-1]
+
+        def put(pool, lk):
+            shp = lk.shape
+            lk = lk.reshape(shp[:-3] + (P, ps) + shp[-2:]).astype(pool.dtype)
+            if pool.ndim == 5:            # stacked [L, n_pages, ps, H, D]
+                return pool.at[:, dest_pages].set(lk, mode="drop")
+            return pool.at[dest_pages].set(lk, mode="drop")
+
+        n_slots = self.length.shape[-1]
+        safe_slot = jnp.where(slot_ids >= 0, slot_ids, jnp.int32(n_slots))
+        tl = true_lens.astype(self.length.dtype)
+        if self.length.ndim == 2:                     # stacked [L, B]
+            length = self.length.at[:, safe_slot].set(tl[None, :],
+                                                      mode="drop")
+        else:
+            length = self.length.at[safe_slot].set(tl, mode="drop")
+        return PagedKVCache(put(self.k, lane.k), put(self.v, lane.v),
+                            self.page_table, length)
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache, data_fields=["k", "v", "page_table", "length"],
+    meta_fields=[])
+
+
 def decode_attention(q, cache_k, cache_v, k_pos, q_pos, *,
                      softmax_scale=None, window: int | None = None):
     """Single-token decode vs a cache. q [B,1,Hq,D]; cache [B,S,Hkv,D];

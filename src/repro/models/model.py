@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import KVCache, RingKVCache
+from .attention import KVCache, PagedKVCache, RingKVCache
 from .layers import (ParamSpec, apply_norm, cross_entropy_loss, embed,
                      embed_schema, init_from_schema, is_spec, norm_schema,
                      param_count, shapes_from_schema, unembed)
@@ -358,11 +358,37 @@ class Model:
                 and not self.cfg.encoder_decoder)
 
     def init_cache(self, batch: int, max_len: int, src_len: int = 0,
-                   dtype=jnp.bfloat16) -> dict:
+                   dtype=jnp.bfloat16, page_size: int | None = None,
+                   kv_pages: int | None = None) -> dict:
+        """page_size/kv_pages non-None builds a *paged* cache: every
+        global-attention KVCache leaf becomes a PagedKVCache over a shared
+        `kv_pages`-page pool (serve/paging.PagePool owns the host-side
+        allocation). Ring (sliding-window) caches are already O(window)
+        and SSM state is fixed-size per lane — neither has anything to
+        page, so they stay lane-resident. Only the bucketed-prefill
+        families (dense/ssm/hybrid) support paging: MLA/VLM/cross-decoder
+        caches carry per-request shapes the page-granular prefill scatter
+        does not cover."""
         cfg = self.cfg
+        if (page_size is None) != (kv_pages is None):
+            raise ValueError("page_size and kv_pages must be set together")
+        if page_size is not None and not self.bucketed_prefill_ok:
+            raise ValueError(
+                f"paged KV cache requires a bucketed-prefill family "
+                f"(dense/ssm/hybrid), not {cfg.family}")
+        if page_size is not None and cfg.mla is not None:
+            raise ValueError("paged KV cache does not support MLA caches")
         caches: dict = {}
         kv_v = max(1, cfg.n_kv_heads) * self.kv_rep
         hd = cfg.resolved_head_dim
+
+        def kv_zeros(L):
+            if page_size is not None:
+                return PagedKVCache.zeros(batch, max_len, kv_v, hd,
+                                          n_pages=kv_pages,
+                                          page_size=page_size, dtype=dtype,
+                                          layers=L)
+            return KVCache.zeros(batch, max_len, kv_v, hd, dtype, layers=L)
         for seg in self.segs:
             L = seg.n if seg.n > 1 else None
             c: Any
@@ -377,8 +403,7 @@ class Model:
                             lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy()
                             if a.ndim else jnp.zeros((L,), a.dtype), att)
                 else:
-                    att = KVCache.zeros(batch, max_len, kv_v, hd, dtype,
-                                        layers=L)
+                    att = kv_zeros(L)
                 c = {"attn": att,
                      "ssm": SSMCache.zeros(cfg, batch, layers=L, dtype=dtype)}
             elif cfg.mla is not None and seg.kind in ("dense", "moe"):
@@ -401,8 +426,7 @@ class Model:
                      "cross": CrossKV.zeros(batch, src_len, cfg.n_kv_heads,
                                             hd, dtype, layers=L)}
             else:
-                c = {"attn": KVCache.zeros(batch, max_len, kv_v, hd, dtype,
-                                           layers=L)}
+                c = {"attn": kv_zeros(L)}
             caches[seg.name] = c
         return caches
 

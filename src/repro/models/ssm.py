@@ -183,6 +183,16 @@ class SSMCache:
             sshape = (layers,) + sshape
         return SSMCache(jnp.zeros(cshape, dtype), jnp.zeros(sshape, dtype))
 
+    def lane_bytes(self) -> int:
+        """Device bytes of ONE lane's SSM state (conv window + SSD state).
+        The state is fixed-size regardless of context length — there is
+        nothing for the paged KV pool to page, so paged serving keeps SSM
+        state lane-resident and the memory accounting
+        (ServeEngine.paged_kv_stats) reports it separately and honestly."""
+        batch = self.conv.shape[-3]
+        return (self.conv.size * self.conv.dtype.itemsize
+                + self.state.size * self.state.dtype.itemsize) // batch
+
 
 jax.tree_util.register_dataclass(
     SSMCache, data_fields=["conv", "state"], meta_fields=[])

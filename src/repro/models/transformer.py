@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from . import attention as attn_mod
-from .attention import KVCache, RingKVCache, chunked_attention, decode_attention
+from .attention import (KVCache, PagedKVCache, RingKVCache, chunked_attention,
+                        decode_attention)
 from .layers import (ParamSpec, apply_mlp, apply_norm, apply_rope, embed,
                      mlp_schema, norm_schema, pod_dense, unembed,
                      embed_schema)
@@ -149,6 +150,14 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions, causal=True, window=None,
             k_pos = new_cache.positions()                # [B, W]
             out = decode_attention(q, new_cache.k, new_cache.v, k_pos,
                                    q_pos, window=window)
+        elif isinstance(cache, PagedKVCache):
+            # paged decode: append into the mapped page, then gather the
+            # lane's pages back to a position-ordered dense view — same
+            # decode_attention contract (k_pos -1 = invalid) as the dense
+            # path, so tokens are bit-identical to KVCache serving.
+            new_cache = cache.append(k, v)
+            ck, cv, k_pos = new_cache.flat_view()
+            out = decode_attention(q, ck, cv, k_pos, q_pos, window=window)
         else:
             new_cache = cache.append(k, v)
             ar = jnp.arange(new_cache.k.shape[1])
@@ -198,6 +207,11 @@ def apply_gqa(p, x, cfg: ArchConfig, *, positions, causal=True, window=None,
                     vw = jnp.roll(vw, roll, axis=1)
                     new_cache = RingKVCache(
                         kw, vw, jnp.full((k.shape[0],), S, jnp.int32))
+            elif isinstance(cache, PagedKVCache):
+                raise TypeError(
+                    "PagedKVCache cannot be prefilled in place; prefill "
+                    "through a dense transient cache and scatter_prefill "
+                    "into the pool (the serve engine does)")
             else:
                 new_cache = cache.append(k, v)
         out = chunked_attention(q, k, v, causal=causal, window=window,

@@ -4,4 +4,5 @@ from .admission import (AdmissionConfig, AdmissionController, EDF, FIFO,
 from .chaos import (ChaosConfig, FaultInjector, PermanentFault,
                     SlowChunkDetector, TransientDeviceError, VirtualClock)
 from .engine import Request, ServeEngine
+from .paging import PageLeak, PagePool
 from .reference import ReferenceEngine

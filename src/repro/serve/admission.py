@@ -43,6 +43,7 @@ in the reference oracle). All controller state is host-side Python.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Callable, Optional
 
 from ..tenancy.planner import predict_latency_s
@@ -130,18 +131,23 @@ class WaveLatencyPredictor:
     `model_seconds(prompt_len, new_tokens)` is the analytical latency of
     the request's own GEMM stream (tenancy.trace.request_gemms lowered at
     decode lanes=1 — the conservative solo estimate) on the configured
-    design point. Results are cached on the pow2 prompt bucket x token
-    budget, so the cache stays bounded the same way the engine's jit
-    cache does.
+    design point. Results are memoized on (pow2 prompt bucket, exact
+    token budget) in a bounded LRU: prompt bucketing alone bounds one key
+    axis, but a long-lived server seeing varied budgets would grow the
+    other without limit (the unbounded-cache bugfix). `cache_cap` entries
+    (~4096 * a few dozen bytes) is the hard ceiling; eviction is
+    least-recently-used, so steady traffic mixes never thrash.
     """
 
     def __init__(self, cfg, design: tuple = DEFAULT_DESIGN,
-                 tdp: float = 400.0, faulty_pods: int = 0):
+                 tdp: float = 400.0, faulty_pods: int = 0,
+                 cache_cap: int = 4096):
         self.cfg = cfg
         self.design = design
         self.tdp = tdp
         self.faulty_pods = int(faulty_pods)
-        self._cache: dict[tuple[int, int], float] = {}
+        self.cache_cap = max(1, int(cache_cap))
+        self._cache: OrderedDict[tuple[int, int], float] = OrderedDict()
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -155,6 +161,10 @@ class WaveLatencyPredictor:
             hit = self._cache[key] = predict_latency_s(
                 gemms, self.design, self.tdp,
                 faulty_pods=self.faulty_pods)
+            if len(self._cache) > self.cache_cap:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
         return hit
 
 
@@ -183,6 +193,38 @@ class AdmissionController:
         self._slo_met = 0
         self._slo_declared = 0
         self._seq = 0                       # submit order for stable sorts
+        self.pool = None                    # serve/paging.PagePool, opt-in
+
+    # -- paged-KV hooks --------------------------------------------------
+    def attach_pool(self, pool) -> None:
+        """Paged serving: free PAGES, not free slots, become the gating
+        resource. The controller then (a) rejects at submit any request
+        whose worst-case page count exceeds the whole pool (it could never
+        run — terminal reason ``pages-exhausted``), and (b) under the
+        slo-aware policy sheds queued requests whose predicted wait for a
+        reservation pushes them past their deadline (``shed-page-
+        exhaustion``). The engine still does the actual reserve/release at
+        its chunk sync."""
+        self.pool = pool
+
+    def _worst_pages(self, req) -> int:
+        budget = min(req.max_new_tokens - 1,
+                     max(0, self.max_len - len(req.prompt)))
+        return self.pool.worst_pages(len(req.prompt), budget)
+
+    def _predicted_page_miss(self, req, now: float) -> bool:
+        if self.pool is None or req._deadline is None:
+            return False
+        short = self.pool.reserved_pages + self._worst_pages(req) \
+            - self.pool.n_pages
+        if short <= 0:
+            return False                    # reservable right now
+        wait = self.pool.estimated_wait_s(short)
+        if wait is None:
+            return False                    # no free-rate sample yet
+        service = self.predicted_wall_seconds(
+            len(req.prompt), req.max_new_tokens) or 0.0
+        return now + wait + service > req._deadline
 
     # -- validation (satellite: typed errors at submit) -----------------
     def validate(self, req) -> None:
@@ -266,6 +308,12 @@ class AdmissionController:
         req._deadline = None if req.deadline_s is None \
             else now + req.deadline_s
         req.state = QUEUED
+        if self.pool is not None and self._worst_pages(req) > \
+                self.pool.n_pages:
+            # larger than the entire page pool: no amount of waiting lets
+            # this request reserve, so fail it loudly at the door
+            self.reject(req, "pages-exhausted")
+            return False
         if self.config.max_queue is None or \
                 len(queue) < self.config.max_queue:
             return True
@@ -300,6 +348,9 @@ class AdmissionController:
             elif self.config.policy == SLO_AWARE and \
                     self._predicted_miss(req, now):
                 self.reject(req, "shed-predicted-miss")
+            elif self.config.policy == SLO_AWARE and \
+                    self._predicted_page_miss(req, now):
+                self.reject(req, "shed-page-exhaustion")
             else:
                 keep.append(req)
         queue[:] = keep

@@ -68,15 +68,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.systolic_gemm.guard import GuardTape, as_guard
-from ..models.attention import KVCache
-from ..models.model import Model
+from ..models.attention import KVCache, PagedKVCache, RingKVCache
+from ..models.model import CrossKV, Model
+from ..models.ssm import SSMCache
 from ..models.transformer import MLACache
 from ..train.fault import Ewma
-from .admission import (AdmissionConfig, AdmissionController, NEW,
-                        SLO_AWARE, ServeStalled, WaveLatencyPredictor)
+from .admission import (AdmissionConfig, AdmissionController, InvalidRequest,
+                        NEW, SLO_AWARE, ServeStalled, WaveLatencyPredictor)
 from .chaos import (FaultInjector, NumericalFault, PermanentFault,
                     SilentCorruption, SlowChunkDetector,
                     TransientDeviceError, check_lanes_finite)
+from .paging import PagePool
 
 
 @dataclasses.dataclass
@@ -104,6 +106,10 @@ class Request:
     _submit_t: float = dataclasses.field(default=0.0, repr=False)
     _admit_t: float = dataclasses.field(default=0.0, repr=False)
     _deadline: Optional[float] = dataclasses.field(default=None, repr=False)
+    # jit cache sizes (prefill + decode) at admit time: a retire whose
+    # epoch grew saw compile time inside its service wall — its κ
+    # calibration sample is skipped (cold-start κ pollution bugfix)
+    _jit_epoch: int = dataclasses.field(default=-1, repr=False)
 
     @property
     def finished(self) -> bool:
@@ -117,7 +123,9 @@ class ServeEngine:
                  decode_chunk: int = 8, prefill_buckets: bool = True,
                  min_bucket: int = 8, metrics=None, admission=None,
                  chaos=None, clock=None, max_retries: int = 3,
-                 backoff_s: float = 1e-3, guard=None):
+                 backoff_s: float = 1e-3, guard=None, paged: bool = False,
+                 page_size: int = 16, kv_pages: Optional[int] = None,
+                 recycle: Optional[bool] = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -138,14 +146,44 @@ class ServeEngine:
         self.decode_chunk = max(1, decode_chunk)
         self.min_bucket = max(1, min_bucket)
         self.bucketed = bool(prefill_buckets) and model.bucketed_prefill_ok
-        self.cache = model.init_cache(slots, max_len, src_len=src_len)
+        # paged=True swaps every global-attention KVCache leaf for a
+        # PagedKVCache over a shared kv_pages-page pool; serve/paging.py
+        # owns the host-side allocator, riding the existing one-sync-per-
+        # chunk boundary. paged=False keeps the hot loop bit-identical to
+        # the dense engine (same arrays, same jit entries, same syncs).
+        self._pool: Optional[PagePool] = None
+        if paged:
+            if not self.bucketed:
+                raise ValueError(
+                    "paged serving requires the bucketed prefill path "
+                    "(dense/ssm/hybrid families with prefill_buckets=True)")
+            if kv_pages is None:
+                # default pool covers the dense worst case exactly; size
+                # it down to oversubscribe (admission then queues on pages)
+                kv_pages = slots * (max_len // page_size)
+            self._pool = PagePool(kv_pages, page_size, slots, max_len,
+                                  chunk_slack=self.decode_chunk)
+            self.cache = model.init_cache(slots, max_len, src_len=src_len,
+                                          page_size=page_size,
+                                          kv_pages=kv_pages)
+        else:
+            self.cache = model.init_cache(slots, max_len, src_len=src_len)
+        # in-chunk lane recycling: after the retires of a decode chunk,
+        # re-run admission at the SAME host sync so a lane that died
+        # mid-chunk hands its slot (and pages) to a queued request with no
+        # intervening idle chunk. Default: on exactly when paged (the
+        # extra admission pass changes chunk-length choices, which the
+        # paged-off bit-identity gate forbids).
+        self.recycle = bool(paged) if recycle is None else bool(recycle)
+        self.recycled = 0
         self.active: list[Optional[Request]] = [None] * slots
         self.positions = np.zeros(slots, np.int32)
         self.budgets = np.zeros(slots, np.int32)
         self.queue: list[Request] = []
         self._buckets_seen: set[int] = set()
         self._batch_axes = self._probe_batch_axes()
-        self._prefill_fn = jax.jit(self._prefill_batched_impl)
+        self._prefill_fn = jax.jit(self._prefill_paged_impl if paged
+                                   else self._prefill_batched_impl)
         self._decode_fn = jax.jit(self._decode_chunk_impl,
                                   static_argnames=("n",))
         # injectable clock (serve/chaos.VirtualClock in tests/benchmarks);
@@ -169,6 +207,11 @@ class ServeEngine:
                 admission, slots=slots, max_len=max_len,
                 predictor=predictor, metrics=metrics)
         self.admission: AdmissionController = admission
+        if self._pool is not None:
+            # paged admission: free pages, not free slots, are the gating
+            # resource — the controller rejects can-never-fit requests at
+            # submit and (slo-aware) sheds on predicted page exhaustion
+            self.admission.attach_pool(self._pool)
         # chaos: a ChaosConfig arms the seeded fault injector plus the
         # EWMA slow-chunk detector; None (default) leaves the hot loop
         # untouched (no per-call hooks at all)
@@ -334,6 +377,10 @@ class ServeEngine:
         offending field) for malformed requests; under a bounded queue the
         admission policy may shed (request ends ``rejected``, reason
         ``queue-full`` / ``shed-predicted-miss``) instead of enqueueing."""
+        if self._pool is not None and req.extras:
+            raise InvalidRequest(
+                "extras", "paged serving cannot prefill per-request extra "
+                "modalities (exact-length fallback is dense-only)")
         if self.admission.on_submit(self.queue, req, self._clock()):
             self.queue.append(req)
         if self.metrics is not None:
@@ -369,27 +416,50 @@ class ServeEngine:
             for r in self.queue:
                 if len(take) < len(free) and not r.extras and \
                         self._bucket(len(r.prompt)) == b:
+                    if self._pool is not None:
+                        # paged admission: a lane starts only if its
+                        # worst-case page count (prompt + clamped budget +
+                        # one chunk of inert-write slack) reserves now —
+                        # the per-chunk mapping then can never fail.
+                        # Requests that don't fit wait queued for pages.
+                        worst = self._pool.worst_pages(
+                            len(r.prompt), self._clamped_budget(r))
+                        if not self._pool.can_reserve(worst):
+                            rest.append(r)
+                            continue
+                        self._pool.reserve(free[len(take)], worst)
                     take.append(r)
                 else:
                     rest.append(r)
             self.queue = rest
+            if not take:
+                # head bucket blocked on pages this quantum; retires at
+                # the next chunk sync will free some
+                return
             self._prefill_group(take, free[: len(take)], b)
 
     # -- bucketed prefill ------------------------------------------------
     def _probe_batch_axes(self):
         """Per-leaf batch axis of the cache pytree, found by diffing a
-        1-lane cache against the slots-lane cache (static metadata; makes
-        lane insertion exact instead of shape-guessed)."""
-        if self.slots == 1:
-            return jax.tree.map(lambda a: 0, self.cache)
+        2-lane cache against a 1-lane cache (static metadata; makes lane
+        insertion exact instead of shape-guessed). Probed from throwaway
+        trees, never self.cache: the batch axis doesn't depend on the
+        engine's slot count, and a slots==1 engine has no size difference
+        of its own to diff (assuming axis 0 there scattered stacked-layer
+        leaves — length [L, B], k [L, B, T, H, D] — along the LAYER axis,
+        silently zeroing every layer past the first)."""
+        # always probed from DENSE trees: the paged prefill runs its
+        # forward over a dense transient lane cache, so the axes tree must
+        # mirror that structure (the pool-shaped leaves never need axes)
+        big = self.model.init_cache(2, self.max_len, src_len=self.src_len)
         ref1 = self.model.init_cache(1, self.max_len, src_len=self.src_len)
 
-        def axis(big, small):
-            for ax in range(big.ndim):
-                if big.shape[ax] != small.shape[ax]:
+        def axis(b, small):
+            for ax in range(b.ndim):
+                if b.shape[ax] != small.shape[ax]:
                     return ax
             return 0
-        return jax.tree.map(axis, self.cache, ref1)
+        return jax.tree.map(axis, big, ref1)
 
     def _prefill_group(self, reqs: list[Request], slot_list: list[int],
                        bucket: int) -> None:
@@ -401,14 +471,28 @@ class ServeEngine:
             toks[g, :S] = r.prompt
             true_lens[g] = S
             slot_ids[g] = s
+        args = [jnp.asarray(toks), jnp.asarray(slot_ids),
+                jnp.asarray(true_lens)]
+        if self._pool is not None:
+            # map each lane's prompt pages, then hand the impl a LANE-
+            # indexed destination table (row g = lane g's pages, sentinel-
+            # padded) for the page-granular scatter. The slot-indexed
+            # device page_table is pushed separately before the next
+            # decode chunk (step() checks pool.dirty).
+            dest = np.full((self.slots, self._pool.pages_per_lane),
+                           self._pool.sentinel, np.int32)
+            for g, (r, s) in enumerate(zip(reqs, slot_list)):
+                self._pool.map_to(s, len(r.prompt))
+                own = self._pool.owned(s)
+                dest[g, :len(own)] = own
+            args.append(jnp.asarray(dest))
         self._buckets_seen.add(bucket)
         t_start = self._clock()
         try:
             if self._guard_on:
                 def call():
                     first, cache, gstats = self._prefill_fn(
-                        self.params, jnp.asarray(toks), self.cache,
-                        jnp.asarray(slot_ids), jnp.asarray(true_lens),
+                        self.params, args[0], self.cache, *args[1:],
                         self._sdc_arr())
                     flags = np.asarray(gstats)
                     if int(flags[1]) > 0:
@@ -421,16 +505,18 @@ class ServeEngine:
             else:
                 first, cache = self._device_call(
                     "prefill", lambda: self._prefill_fn(
-                        self.params, jnp.asarray(toks), self.cache,
-                        jnp.asarray(slot_ids), jnp.asarray(true_lens)))
+                        self.params, args[0], self.cache, *args[1:]))
         except PermanentFault:
             # the whole group failed before any state was assigned: shed
-            # the requests (terminal `rejected`), slots stay free
+            # the requests (terminal `rejected`), slots stay free and
+            # their page reservations return to the pool
             self._reject_group(reqs, "device-fault")
+            self._release_group(slot_list, len(reqs))
             return
         except SilentCorruption:
             self.guard_events["uncorrectable"] += 1
             self._reject_group(reqs, "sdc-uncorrectable")
+            self._release_group(slot_list, len(reqs))
             return
         self.cache = cache
         first = np.asarray(first)
@@ -451,6 +537,9 @@ class ServeEngine:
                     if first[g] < 0]
         if poisoned:
             self._shed_non_finite(poisoned, where="prefill")
+            if self._pool is not None:
+                for _, s in poisoned:    # slot never activated: free pages
+                    self._pool.release(s, now=self._clock())
         for g, (r, s) in enumerate(zip(reqs, slot_list)):
             if first[g] < 0:
                 continue
@@ -460,19 +549,17 @@ class ServeEngine:
             self.budgets[s] = self.admission.clamp_budget(
                 r, self._clamped_budget(r), len(self.queue))
             self.admission.note_admitted(r, t_end)
+            r._jit_epoch = self._jit_sizes()
             self._retire_if_full(s)
 
-    def _prefill_batched_impl(self, params, tokens, big_cache, slot_ids,
-                              true_lens, sdc=None):
-        """One jitted prefill over a fixed [slots, bucket] token batch:
-        forward, per-lane last-real-position logits, per-lane length fixup,
-        and scatter of each real lane into its slot of the batched cache.
-        Compiles once per bucket (tokens' trailing dim is the only varying
-        shape). With the guard on, the forward runs under a GuardTape
-        (every pod GEMM verified; `sdc` is the traced injection plan) and
-        the tape totals become a third output riding the existing sync.
-        A lane with non-finite last-position logits encodes its first
-        token as -1 — same arrays, same syncs as the healthy path."""
+    def _prefill_forward(self, params, tokens, true_lens, sdc):
+        """Shared body of both prefill impls: forward over a dense
+        transient lane cache, per-lane last-real-position logits, length
+        fixup. A lane with non-finite last-position logits encodes its
+        first token as -1 — same arrays, same syncs as the healthy path.
+        With the guard on, the forward runs under a GuardTape (every pod
+        GEMM verified; `sdc` is the traced injection plan) and the tape
+        totals become an extra output riding the existing sync."""
         lane_cache = self.model.init_cache(self.slots, self.max_len,
                                            src_len=self.src_len)
         # true_lens drives the stateful families' masked state updates
@@ -489,12 +576,22 @@ class ServeEngine:
             logits, lane_cache = self.model.forward(params, {"tokens": tokens},
                                                     cache=lane_cache,
                                                     true_lens=true_lens)
+            gstats = None
         idx = jnp.maximum(true_lens - 1, 0)
         last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
         first_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
         first_tok = jnp.where(jnp.isfinite(last).all(axis=-1), first_tok,
                               jnp.int32(-1))
-        lane_cache = _fix_lengths(lane_cache, true_lens)
+        return first_tok, _fix_lengths(lane_cache, true_lens), gstats
+
+    def _prefill_batched_impl(self, params, tokens, big_cache, slot_ids,
+                              true_lens, sdc=None):
+        """One jitted prefill over a fixed [slots, bucket] token batch:
+        forward (see _prefill_forward) then scatter of each real lane into
+        its slot of the batched cache. Compiles once per bucket (tokens'
+        trailing dim is the only varying shape)."""
+        first_tok, lane_cache, gstats = self._prefill_forward(
+            params, tokens, true_lens, sdc)
         cache = big_cache
         for g in range(self.slots):                   # static unroll
             valid = slot_ids[g] >= 0
@@ -509,6 +606,22 @@ class ServeEngine:
                         s, axis=ax),
                     big),
                 cache, lane_cache, self._batch_axes)
+        if self._guard_on:
+            return first_tok, cache, gstats
+        return first_tok, cache
+
+    def _prefill_paged_impl(self, params, tokens, big_cache, slot_ids,
+                            true_lens, dest_pages, sdc=None):
+        """Paged twin of _prefill_batched_impl: the identical forward over
+        a dense transient lane cache, then a page-granular scatter of the
+        attention KV into the pool (dest_pages: lane-indexed page rows the
+        host allocator chose, sentinel-padded) while lane-resident state
+        (SSM, ring windows) takes the same per-slot dense scatter as the
+        dense impl. Still compiles once per bucket."""
+        first_tok, lane_cache, gstats = self._prefill_forward(
+            params, tokens, true_lens, sdc)
+        cache = _paged_insert(big_cache, lane_cache, self._batch_axes,
+                              slot_ids, true_lens, dest_pages, self.slots)
         if self._guard_on:
             return first_tok, cache, gstats
         return first_tok, cache
@@ -554,6 +667,7 @@ class ServeEngine:
         self.budgets[slot] = self.admission.clamp_budget(
             req, self._clamped_budget(req), len(self.queue))
         self.admission.note_admitted(req, t_end)
+        req._jit_epoch = self._jit_sizes()
         self._retire_if_full(slot)
 
     def _clamped_budget(self, req: Request) -> int:
@@ -571,7 +685,32 @@ class ServeEngine:
         slot."""
         if self.positions[slot] >= self.max_len:
             self.admission.finish(self.active[slot], now=self._clock())
-            self.active[slot] = None
+            self._release_slot(slot)
+
+    def _release_slot(self, i: int) -> None:
+        """Clear a lane AND return its pages — the single retirement path
+        for every way a lane can die (finish, expiry, shed, device fault),
+        so chaos can never leak pages."""
+        if self._pool is not None:
+            self._pool.release(i, now=self._clock())
+        self.active[i] = None
+
+    def _release_group(self, slot_list: list[int], n: int) -> None:
+        if self._pool is not None:
+            for s in slot_list[:n]:
+                self._pool.release(s, now=self._clock())
+
+    def _jit_sizes(self) -> int:
+        """Combined prefill+decode jit cache entry count — the jit-epoch
+        stamp for the cold-start κ fix (a service interval that saw ANY
+        compile, its own or a co-resident lane's, is not a clean sample)."""
+        total = 0
+        for fn in (self._prefill_fn, self._decode_fn):
+            try:
+                total += int(fn._cache_size())
+            except AttributeError:                    # pragma: no cover
+                return -2     # can't tell -> epochs never match, skip all
+        return total
 
     # -- fused decode loop ------------------------------------------------
     def _decode_chunk_impl(self, params, cache, toks, pos, bud, alive,
@@ -672,6 +811,16 @@ class ServeEngine:
         if not live:
             return 0
         n = self._chunk_len(live)
+        if self._pool is not None:
+            # map pages to cover this chunk's appends (live lanes reach
+            # pos+n; a lane that dies mid-chunk writes inertly inside the
+            # same bound — covered by its reservation's chunk slack), then
+            # push the refreshed slot-indexed table if anything changed.
+            # Host-side work + one async host->device transfer: no syncs.
+            for i in live:
+                self._pool.map_to(i, int(self.positions[i]) + n)
+            if self._pool.dirty:
+                self.cache = self._with_table(self.cache)
         toks = np.zeros(self.slots, np.int32)
         alive0 = np.zeros(self.slots, bool)
         for i in live:
@@ -707,7 +856,7 @@ class ServeEngine:
             self._reject_group([self.active[i] for i in live],
                                "device-fault")
             for i in live:
-                self.active[i] = None
+                self._release_slot(i)
             return len(live)
         except SilentCorruption:
             # every retry recomputed the same corrupted chunk; no state
@@ -717,7 +866,7 @@ class ServeEngine:
             self._reject_group([self.active[i] for i in live],
                                "sdc-uncorrectable")
             for i in live:
-                self.active[i] = None
+                self._release_slot(i)
             return len(live)
         self.cache = cache
         seq = np.asarray(seq)                         # the ONE host sync
@@ -747,6 +896,7 @@ class ServeEngine:
                     self.tracer.on_decode(
                         len(lanes), [int(pos0[i]) + s for i in lanes],
                         t=(t_start - self._t0) + s * dt_step)
+        jit_now = self._jit_sizes()
         for i in live:
             r = self.active[i]
             cnt = int(emits[:, i].sum())
@@ -756,15 +906,21 @@ class ServeEngine:
             hit_eos = (self.eos_id is not None and cnt > 0
                        and int(seq[cnt - 1, i]) == self.eos_id)
             if self.budgets[i] <= 0 or hit_eos:
-                if self.admission.predictor is not None:
+                if (self.admission.predictor is not None
+                        and jit_now == r._jit_epoch):
                     # κ calibration: measured service wall-clock vs the
-                    # wave model's prediction for this request
+                    # wave model's prediction for the tokens this request
+                    # ACTUALLY produced (len(out), not the full budget —
+                    # early-EOS/clamped completions must not bias κ low).
+                    # Skipped when the jit cache grew during service: the
+                    # wall then includes compile time, which would inflate
+                    # κ and shed the requests right behind a cold start.
                     self.admission.observe_service(
                         self.admission.predictor.model_seconds(
-                            len(r.prompt), r.max_new_tokens),
+                            len(r.prompt), max(1, len(r.out))),
                         t_end - r._admit_t)
                 self.admission.finish(r, now=t_end)
-                self.active[i] = None
+                self._release_slot(i)
         # non-finite lanes (flags rode the stats sync): a poisoned lane
         # stopped emitting at the bad step — it cannot have finished above
         # (its budget never reached 0 on a masked emit) — shed it and
@@ -775,13 +931,53 @@ class ServeEngine:
         if poisoned:
             self._shed_non_finite(poisoned, where="decode")
             for _, i in poisoned:
-                self.active[i] = None
+                self._release_slot(i)
         # deadline enforcement at the chunk's existing host sync (zero new
         # syncs): completion above wins over expiry in the same chunk
         for i in self.admission.expired_lanes(self.active, t_end):
             self.admission.expire(self.active[i], "deadline-exceeded")
-            self.active[i] = None
+            self._release_slot(i)
+        if self.recycle and self.queue and \
+                any(r is None for r in self.active):
+            # in-chunk lane recycling: a lane that died inside THIS chunk
+            # (eos/budget/deadline/fault — its emit mask went dead at step
+            # s < n) hands its slot and pages to queued work at this same
+            # host sync. The successor's prefill lands before the next
+            # decode chunk, so no idle chunk intervenes, and the tracer
+            # records the handoff step-locked (prefill event at this
+            # boundary's wall time) exactly like a start-of-step admit.
+            occupied = sum(r is not None for r in self.active)
+            self._admit()
+            self.recycled += max(
+                0, sum(r is not None for r in self.active) - occupied)
+        self._observe_paged()
         return len(live)
+
+    def _with_table(self, cache):
+        """Push the pool's slot-indexed page table into every paged leaf
+        (broadcast across stacked layers). An async host->device transfer
+        of a tiny int32 array; same pytree structure, so no recompiles."""
+        table = self._pool.table()
+
+        def fix(node):
+            if isinstance(node, PagedKVCache):
+                pt = jnp.asarray(np.broadcast_to(table,
+                                                 node.page_table.shape))
+                return dataclasses.replace(node, page_table=pt)
+            return node
+        return jax.tree.map(fix, cache,
+                            is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+    def _observe_paged(self) -> None:
+        m, pool = self.metrics, self._pool
+        if m is None or pool is None:
+            return
+        m.gauge("serve.paged.occupancy").set(pool.occupancy)
+        m.gauge("serve.paged.pages_in_use").set(pool.pages_in_use)
+        m.gauge("serve.paged.reserved_pages").set(pool.reserved_pages)
+        chunks = m.counter("serve.decode.chunks").value
+        if chunks:
+            m.gauge("serve.paged.recycle_rate").set(self.recycled / chunks)
 
     def run_to_completion(self, max_steps: int = 10_000) -> None:
         """Drive the engine until queue and slots drain. Raises
@@ -817,6 +1013,48 @@ class ServeEngine:
     def max_prefill_compiles(self) -> int:
         return max(1, int(math.log2(self.max_len)))
 
+    def paged_kv_stats(self) -> dict:
+        """Host-side page-pool accounting (no device sync). KV bytes are
+        derived from the paged leaves' actual dtypes/shapes; `dense_bytes`
+        is what the same leaves would cost as slots x max_len dense lanes
+        — the scaling the paged cache exists to beat. SSM/ring state is
+        fixed-size lane-resident (nothing to page) and reported separately
+        as `resident_lane_bytes` so the accounting stays honest."""
+        pool = self._pool
+        if pool is None:
+            raise ValueError("paged_kv_stats requires paged=True")
+        per_tok = 0
+        resident = 0
+        is_node = lambda x: isinstance(x, (PagedKVCache, RingKVCache,
+                                           SSMCache))
+        for leaf in jax.tree.leaves(self.cache, is_leaf=is_node):
+            if isinstance(leaf, PagedKVCache):
+                per_tok += (leaf.k.nbytes + leaf.v.nbytes) \
+                    // (pool.n_pages * pool.page_size)
+            elif isinstance(leaf, SSMCache):
+                resident += leaf.lane_bytes() * self.slots
+            elif isinstance(leaf, RingKVCache):
+                resident += leaf.k.nbytes + leaf.v.nbytes
+        live_tokens = sum(int(self.positions[i])
+                          for i, r in enumerate(self.active)
+                          if r is not None)
+        return {
+            "page_size": pool.page_size,
+            "total_pages": pool.n_pages,
+            "pages_in_use": pool.pages_in_use,
+            "free_pages": pool.free_pages,
+            "reserved_pages": pool.reserved_pages,
+            "occupancy": pool.occupancy,
+            "live_tokens": live_tokens,
+            "mapped_tokens": pool.pages_in_use * pool.page_size,
+            "kv_bytes_per_token": per_tok,
+            "mapped_bytes": pool.pages_in_use * pool.page_size * per_tok,
+            "pool_bytes": pool.n_pages * pool.page_size * per_tok,
+            "dense_bytes": self.slots * self.max_len * per_tok,
+            "resident_lane_bytes": resident,
+            "recycled": self.recycled,
+        }
+
 
 def _fix_lengths(cache, true_lens):
     """Reset per-lane cache lengths from the padded bucket length to the
@@ -830,6 +1068,46 @@ def _fix_lengths(cache, true_lens):
         return node
     return jax.tree.map(
         fix, cache, is_leaf=lambda x: isinstance(x, (KVCache, MLACache)))
+
+
+_CACHE_NODES = (KVCache, PagedKVCache, RingKVCache, MLACache, SSMCache,
+                CrossKV)
+
+
+def _paged_insert(big_cache, lane_cache, batch_axes, slot_ids, true_lens,
+                  dest_pages, slots: int):
+    """Merge a dense transient prefill cache into the persistent paged
+    cache, node by node: PagedKVCache nodes take the page-granular scatter
+    (their dense twin in `lane_cache` reshapes to pages and lands on the
+    host-chosen `dest_pages`), every other node — SSM state, ring windows
+    — takes the same per-slot dense scatter as the dense impl. The
+    node-level tree.map is what lets the two trees disagree in type at
+    exactly the paged positions (flatten_up_to pairs whole nodes)."""
+    def is_node(x):
+        return isinstance(x, _CACHE_NODES)
+
+    def merge(big, lane, ax):
+        if isinstance(big, PagedKVCache):
+            return big.scatter_prefill(lane, dest_pages, slot_ids,
+                                       true_lens)
+
+        def one(b, l, a):
+            out = b
+            for g in range(slots):                    # static unroll
+                valid = slot_ids[g] >= 0
+                s = jnp.maximum(slot_ids[g], 0)
+                out = jnp.where(
+                    valid,
+                    jax.lax.dynamic_update_slice_in_dim(
+                        out,
+                        jax.lax.dynamic_slice_in_dim(l, g, 1, axis=a
+                                                     ).astype(b.dtype),
+                        s, axis=a),
+                    out)
+            return out
+        return jax.tree.map(one, big, lane, ax)
+    return jax.tree.map(merge, big_cache, lane_cache, batch_axes,
+                        is_leaf=is_node)
 
 
 def _write_lane(batched_cache, lane_cache, slot: int):

@@ -1,0 +1,23 @@
+"""Suite-wide fixtures.
+
+The full suite compiles thousands of XLA programs in one process (every
+engine/test builds fresh jitted closures). On the 1-core CI box the
+accumulated executable state eventually segfaults XLA's CPU compiler
+mid-`backend_compile` (deterministically, ~250 tests in — the crashing
+program compiles fine in isolation). Dropping the dead jit caches at
+module boundaries bounds that state; per-module compile-count
+assertions (engine `_cache_size`, `choose_blocks.cache_info`) are
+unaffected because they never span modules.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_xla_state_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -601,3 +601,117 @@ def test_check_passes_on_clean_suite(monkeypatch, capsys):
     out = capsys.readouterr()
     assert "tiny/_total" in out.out
     assert "OK" in out.err
+
+
+# --------------------------------------------------------------------------
+# PR 10 bugfixes: κ-calibration skew, cold-start pollution, bounded cache
+# --------------------------------------------------------------------------
+
+def test_calibration_observes_actual_tokens_not_budget(parts):
+    """κ-skew regression: the calibration sample after retire must price
+    the tokens the request ACTUALLY produced (len(out)), not the full
+    max_new_tokens budget. An early-EOS request that emits 4 of 16 tokens
+    would otherwise divide its wall by a 4x-too-large model_seconds and
+    drag κ (and every prediction behind it) down."""
+    cfg, model, params = parts
+
+    # discover a token the model actually emits a few steps in
+    ref = ReferenceEngine(model, params, slots=1, max_len=64)
+    probe = Request(rid=0, prompt=_prompt(cfg, 6, 5), max_new_tokens=16)
+    ref.submit(probe)
+    ref.run_to_completion(max_steps=200)
+    eos = int(probe.out[3])
+    if eos in [int(t) for t in probe.out[:3]]:
+        eos = int(probe.out[4])
+
+    clk = VirtualClock()
+    eng = ServeEngine(model, params, slots=1, max_len=64, decode_chunk=8,
+                      eos_id=eos, clock=clk,
+                      admission=AdmissionConfig(policy="slo-aware"),
+                      chaos=ChaosConfig(seed=0, service_seconds=0.05))
+    samples = []
+    real = eng.admission.observe_service
+
+    def spy(model_seconds, wall_seconds):
+        samples.append((model_seconds, wall_seconds))
+        real(model_seconds, wall_seconds)
+
+    eng.admission.observe_service = spy
+    # warmup trace with a DIFFERENT prompt (same pow2 bucket, no eos in
+    # its early tokens is irrelevant — it may stop early too) to populate
+    # the jit caches so the measured request's epoch matches
+    warm = Request(rid=1, prompt=_prompt(cfg, 7, 9), max_new_tokens=16)
+    eng.submit(warm)
+    _drain(eng, [warm])
+    kappa_steady = eng.admission._calibration.value
+    samples.clear()
+
+    r = Request(rid=2, prompt=_prompt(cfg, 6, 5), max_new_tokens=16)
+    eng.submit(r)
+    _drain(eng, [r])
+    assert r.state == "done" and r.out[-1] == eos
+    assert len(r.out) < 16, "probe token must end the request early"
+    assert len(samples) == 1, "warm retire must contribute one κ sample"
+    p = eng.admission.predictor
+    want = p.model_seconds(len(r.prompt), len(r.out))
+    not_want = p.model_seconds(len(r.prompt), r.max_new_tokens)
+    assert samples[0][0] == pytest.approx(want)
+    assert samples[0][0] < not_want, "sample priced at budget, not output"
+    # and κ itself stays in the steady-state band instead of cratering
+    if kappa_steady is not None:
+        assert eng.admission._calibration.value > 0.5 * kappa_steady
+
+
+def test_cold_start_compile_does_not_pollute_kappa(parts):
+    """Cold-start regression: request 1 of a cold engine retires with the
+    prefill/decode compiles inside its service wall. That sample must be
+    SKIPPED (jit epoch grew during service) — κ stays unwarmed — so a
+    deadline-carrying request 2 is not shed on a compile-inflated
+    prediction. Request 2's own retire, with stable caches, seeds κ."""
+    cfg, model, params = parts
+    eng = ServeEngine(model, params, slots=1, max_len=64, decode_chunk=8,
+                      admission=AdmissionConfig(policy="slo-aware"))
+    r1 = Request(rid=1, prompt=_prompt(cfg, 6, 1), max_new_tokens=8)
+    import time as _time
+    t0 = _time.perf_counter()
+    eng.submit(r1)
+    _drain(eng, [r1])
+    r1_wall = _time.perf_counter() - t0
+    assert r1.state == "done"
+    # the poisoned sample was dropped: κ is still unwarmed
+    assert eng.admission._calibration.value is None
+    # request 2: same shapes (warm), deadline far below r1's cold wall —
+    # a κ seeded from r1 would predict a miss and shed it at admission
+    r2 = Request(rid=2, prompt=_prompt(cfg, 6, 2), max_new_tokens=8,
+                 deadline_s=max(0.05, 0.25 * r1_wall))
+    eng.submit(r2)
+    _drain(eng, [r2])
+    assert r2.state == "done", (r2.state, r2.reason)
+    assert r2.reason != "shed-predicted-miss"
+    # r2 ran on stable caches: ITS sample warms κ
+    assert eng.admission._calibration.value is not None
+
+
+def test_wave_predictor_cache_is_bounded(parts, monkeypatch):
+    """Bounded-predictor-cache regression: 10k requests with random
+    (prompt, budget) shapes must not grow the memo past cache_cap, and
+    the hot (recently used) entries stay resident."""
+    cfg, _, _ = parts
+    from repro.serve import admission as adm
+    monkeypatch.setattr(adm, "request_gemms", lambda *a, **k: None)
+    monkeypatch.setattr(adm, "predict_latency_s",
+                        lambda *a, **k: 1e-3)
+    p = WaveLatencyPredictor(cfg, cache_cap=256)
+    rng = np.random.default_rng(0)
+    for _ in range(10_000):
+        p.model_seconds(int(rng.integers(1, 4096)),
+                        int(rng.integers(1, 512)))
+        assert len(p._cache) <= p.cache_cap
+    # LRU, not FIFO: touching an old key keeps it through later inserts
+    p2 = WaveLatencyPredictor(cfg, cache_cap=4)
+    for n in (1, 2, 3, 4):
+        p2.model_seconds(8, n)
+    p2.model_seconds(8, 1)                  # refresh the oldest entry
+    p2.model_seconds(8, 5)                  # evicts (8->bucket, 2), not 1
+    assert (p2._bucket(8), 1) in p2._cache
+    assert (p2._bucket(8), 2) not in p2._cache

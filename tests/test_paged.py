@@ -1,0 +1,389 @@
+"""Paged KV cache + in-chunk lane recycling (serve/paging.py,
+models/attention.PagedKVCache, ServeEngine(paged=True)).
+
+The contract under test:
+  * paged serving is token-exact vs the dense ReferenceEngine oracle
+    (the gathered per-lane view is position-ordered, so attention math is
+    bit-identical) — here for dense traffic, in test_serve_matrix.py for
+    every bucketed family;
+  * device KV bytes scale with LIVE context: mapped bytes stay <= 1.25x
+    sum-of-true-lengths x per-token bytes at steady state, vs the dense
+    slots x max_len reservation;
+  * a lane that dies mid-chunk hands its slot (and pages) to a queued
+    request at that same chunk sync — the successor is running before the
+    caller sees the next quantum, no intervening idle chunk;
+  * admission is page-driven: a request bigger than the whole pool is
+    rejected ``pages-exhausted`` at submit; an oversubscribed pool
+    (kv_pages < slots x max_len / page_size) queues on pages and still
+    completes everything;
+  * page-pool invariants hold under randomized traffic with chaos armed —
+    {free} + {owned} exactly partition the pool at every quantum, pages
+    allocated == pages freed at drain, and no fault path leaks a page.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_arch, reduced
+from repro.models.model import Model
+from repro.serve.admission import AdmissionConfig, InvalidRequest, \
+    TERMINAL_STATES
+from repro.serve.chaos import ChaosConfig, VirtualClock
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paging import PageLeak, PagePool
+from repro.serve.reference import ReferenceEngine
+
+
+@pytest.fixture(scope="module")
+def parts():
+    cfg = reduced(get_arch("granite-8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(0, cfg.vocab, n,
+                                                dtype=np.int32)
+
+
+def _reference_outs(model, params, prompts, max_new, max_len=32,
+                    eos_id=None):
+    ref = ReferenceEngine(model, params, slots=2, max_len=max_len,
+                         eos_id=eos_id)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        ref.submit(r)
+    ref.run_to_completion(max_steps=2000)
+    return {r.rid: list(r.out) for r in reqs}
+
+
+# --------------------------------------------------------------------------
+# allocator unit invariants
+# --------------------------------------------------------------------------
+
+def test_pool_reserve_map_release_roundtrip():
+    pool = PagePool(n_pages=8, page_size=8, slots=2, max_len=32,
+                    chunk_slack=4)
+    # worst case: min(max_len, prompt+budget+slack) ceil-divided by pages
+    assert pool.worst_pages(9, 7) == 3          # 9+7+4=20 -> 3 pages
+    assert pool.worst_pages(30, 50) == 4        # clamped to max_len=32
+    pool.reserve(0, 3)
+    assert pool.map_to(0, 9) is True            # 2 pages mapped
+    assert pool.pages_in_use == 2
+    assert pool.map_to(0, 9) is False           # idempotent
+    pool.map_to(0, 999)                         # clamps to the reservation
+    assert len(pool.owned(0)) == 3
+    pool.check()
+    with pytest.raises(PageLeak):
+        pool.reserve(0, 1)                      # double-reserve
+    table = pool.table()
+    assert table.shape == (2, 4)
+    assert set(table[0, :3]) == set(pool.owned(0))
+    assert (table[1] == pool.sentinel).all()
+    pool.release(0)
+    pool.assert_drained()
+
+
+def test_pool_overflow_is_loud():
+    pool = PagePool(n_pages=4, page_size=8, slots=4, max_len=32)
+    pool.reserve(0, 3)
+    assert not pool.can_reserve(2)
+    with pytest.raises(PageLeak):
+        pool.reserve(1, 2)
+
+
+# --------------------------------------------------------------------------
+# tentpole: token-exact paged serving, memory scaling, recycling
+# --------------------------------------------------------------------------
+
+def test_paged_token_exact_and_pool_drains(parts):
+    cfg, model, params = parts
+    prompts = [_prompt(cfg, n, n) for n in (4, 9, 6, 17, 12)]
+    ref = _reference_outs(model, params, prompts, max_new=8)
+    eng = ServeEngine(model, params, slots=2, max_len=32, decode_chunk=4,
+                      paged=True, page_size=8)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=2000)
+    assert {r.rid: list(r.out) for r in reqs} == ref
+    eng._pool.assert_drained()
+    # the two-slot engine served five requests: lanes were recycled at
+    # chunk syncs rather than waiting for the next quantum's admit
+    assert eng.recycled >= 1
+
+
+def test_paged_kv_bytes_scale_with_live_context(parts):
+    """Acceptance bound: mapped KV bytes <= 1.25x live tokens x per-token
+    bytes at every post-admission quantum, and far under the dense
+    slots x max_len reservation."""
+    cfg, model, params = parts
+    eng = ServeEngine(model, params, slots=4, max_len=128, decode_chunk=4,
+                      paged=True, page_size=8)
+    lens = (41, 44, 47, 43)
+    reqs = [Request(rid=i, prompt=_prompt(cfg, n, i), max_new_tokens=16)
+            for i, n in enumerate(lens)]
+    for r in reqs:
+        eng.submit(r)
+    checked = 0
+    for _ in range(200):
+        if not eng.queue and not any(eng.active):
+            break
+        eng.step()
+        s = eng.paged_kv_stats()
+        if s["live_tokens"]:
+            assert s["mapped_bytes"] <= \
+                1.25 * s["live_tokens"] * s["kv_bytes_per_token"], s
+            # and nowhere near the dense worst case for these contexts
+            assert s["mapped_bytes"] < 0.6 * s["dense_bytes"], s
+            checked += 1
+    assert checked >= 3, "never observed a live steady state"
+    assert all(r.state == "done" for r in reqs)
+    eng._pool.assert_drained()
+
+
+def test_midchunk_eos_hands_slot_over_without_idle_chunk(parts):
+    """A lane that hits EOS inside a chunk is re-armed from the queue at
+    that same chunk sync: after the step() call in which r1 died, r2 is
+    already running with its prefill token — no intervening quantum, no
+    idle chunk."""
+    cfg, model, params = parts
+    p1 = _prompt(cfg, 6, 3)
+    p2 = _prompt(cfg, 5, 4)
+    # discover a token r1 actually emits mid-chunk, then replay with it
+    # as the EOS id (budget 12 -> chunks of 8: out[3] dies at scan step 3)
+    probe = _reference_outs(model, params, [p1], max_new=12)[0]
+    eos = probe[3]
+    if eos in probe[:3] or eos == probe[0]:
+        eos = probe[4]                      # avoid an earlier accidental hit
+    eng = ServeEngine(model, params, slots=1, max_len=64, decode_chunk=8,
+                      eos_id=eos, paged=True, page_size=8)
+    r1 = Request(rid=1, prompt=p1, max_new_tokens=12)
+    r2 = Request(rid=2, prompt=p2, max_new_tokens=4)
+    eng.submit(r1)
+    eng.submit(r2)
+    handoff_seen = False
+    for _ in range(50):
+        if not eng.queue and not any(eng.active):
+            break
+        live = eng.step()
+        assert live > 0, "idle chunk: work pending but no lanes live"
+        if r1.finished and not handoff_seen:
+            handoff_seen = True
+            # the SAME step that retired r1 must have re-armed r2
+            assert r2.state == "running" and len(r2.out) >= 1, \
+                (r2.state, r2.out)
+    assert r1.state == "done" and r1.out[-1] == eos
+    assert r2.state == "done"
+    assert handoff_seen
+    assert eng.recycled >= 1
+    eng._pool.assert_drained()
+
+
+def test_paged_admission_queues_on_pages_not_slots(parts):
+    """Oversubscribed pool (kv_pages << slots x max_len / page_size): the
+    page reservation, not slot count, caps concurrency; blocked requests
+    wait queued and everything still completes."""
+    cfg, model, params = parts
+    eng = ServeEngine(model, params, slots=6, max_len=64, decode_chunk=4,
+                      paged=True, page_size=8, kv_pages=16)
+    # worst case per request: ceil((20 + 3 + 4)/8) = 4 pages -> only 4 of
+    # the 6 lanes can hold a reservation at once
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 20, i), max_new_tokens=4)
+            for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    max_live = 0
+    for _ in range(200):
+        if not eng.queue and not any(eng.active):
+            break
+        eng.step()
+        eng._pool.check()
+        assert eng._pool.reserved_pages <= eng._pool.n_pages
+        max_live = max(max_live, sum(r is not None for r in eng.active))
+    assert all(r.state == "done" for r in reqs)
+    assert max_live <= 4, "pages should cap concurrency below slot count"
+    eng._pool.assert_drained()
+
+
+def test_request_larger_than_pool_rejected_at_submit(parts):
+    cfg, model, params = parts
+    eng = ServeEngine(model, params, slots=2, max_len=64, decode_chunk=4,
+                      paged=True, page_size=8, kv_pages=4)
+    big = Request(rid=1, prompt=_prompt(cfg, 40), max_new_tokens=4)
+    eng.submit(big)
+    assert big.state == "rejected" and big.reason == "pages-exhausted"
+    hungry = Request(rid=2, prompt=_prompt(cfg, 8), max_new_tokens=40)
+    eng.submit(hungry)
+    assert hungry.state == "rejected" and hungry.reason == "pages-exhausted"
+    ok = Request(rid=3, prompt=_prompt(cfg, 8), max_new_tokens=4)
+    eng.submit(ok)
+    eng.run_to_completion(max_steps=200)
+    assert ok.state == "done"
+    eng._pool.assert_drained()
+
+
+def test_paged_validation(parts):
+    cfg, model, params = parts
+    with pytest.raises(ValueError, match="bucketed"):
+        ServeEngine(model, params, slots=2, max_len=32, paged=True,
+                    prefill_buckets=False)
+    with pytest.raises(ValueError, match="multiple"):
+        ServeEngine(model, params, slots=2, max_len=32, paged=True,
+                    page_size=7)
+    eng = ServeEngine(model, params, slots=2, max_len=32, paged=True,
+                      page_size=8)
+    with pytest.raises(InvalidRequest, match="extras"):
+        eng.submit(Request(rid=1, prompt=_prompt(cfg, 4),
+                           extras={"frames": np.zeros((1, 2, 4))}))
+    # MLA families refuse a paged cache outright
+    mla_cfg = reduced(get_arch("deepseek-v2-236b"))
+    with pytest.raises(ValueError):
+        Model(mla_cfg).init_cache(2, 32, page_size=8, kv_pages=8)
+
+
+def test_paged_off_has_no_pool_and_no_recycle(parts):
+    """paged=False must build the identical engine the bit-identity gates
+    in tests/test_serving.py / test_admission.py compare against the
+    seed: no pool, no recycling admit pass."""
+    cfg, model, params = parts
+    eng = ServeEngine(model, params, slots=2, max_len=32)
+    assert eng._pool is None and eng.recycle is False
+    with pytest.raises(ValueError):
+        eng.paged_kv_stats()
+
+
+def test_recycle_handoff_replays_step_locked_in_tracer(parts):
+    """tenancy/trace.py lowering stays exact under recycling: a recycled
+    lane's prefill is recorded at the chunk sync it happened in (stamped
+    at/after every event of the chunk that freed the lane), the event
+    stream accounts for every served token, and the time-ordered stream
+    lowers to a GemmSpec chain without error."""
+    from repro.tenancy.trace import ServeTraceRecorder, trace_to_gemms
+    cfg, model, params = parts
+    rec = ServeTraceRecorder()
+    eng = ServeEngine(model, params, slots=2, max_len=32, decode_chunk=4,
+                      tracer=rec, paged=True, page_size=8)
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 4 + i, i), max_new_tokens=5)
+            for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=200)
+    assert all(r.state == "done" for r in reqs)
+    assert eng.recycled >= 1
+    assert rec.num_prefills == len(reqs)
+    # every decode-emitted token shows up in the event stream (prefill
+    # produces each request's first token; decode events carry the rest)
+    assert rec.phase_tokens("decode") == \
+        sum(len(r.out) for r in reqs) - len(reqs)
+    # stamps are non-decreasing once sorted the way the lowering sorts —
+    # and a recycled prefill never lands BEFORE the chunk that freed it
+    stamps = [e[-1] for e in rec.events]
+    order = sorted(range(len(stamps)), key=lambda i: stamps[i])
+    prefills_seen = 0
+    for i in order:
+        if rec.events[i][0] == "prefill":
+            prefills_seen += 1
+    assert prefills_seen == len(reqs)
+    gemms = trace_to_gemms(rec, cfg)
+    assert gemms and all(g.d1 >= 1 for g in gemms)
+    eng._pool.assert_drained()
+
+
+# --------------------------------------------------------------------------
+# chaos: fault paths must not leak pages
+# --------------------------------------------------------------------------
+
+def test_paged_faults_do_not_leak_pages(parts):
+    """transient_tries > max_retries: calls escalate to PermanentFault and
+    requests shed — every affected lane's pages must return to the pool
+    (the _release_slot discipline on every death path)."""
+    cfg, model, params = parts
+    eng = ServeEngine(model, params, slots=2, max_len=32, decode_chunk=4,
+                      max_retries=1, paged=True, page_size=8,
+                      chaos=ChaosConfig(seed=1, p_fault=0.4,
+                                        transient_tries=5))
+    reqs = [Request(rid=i, prompt=_prompt(cfg, 4 + i, i), max_new_tokens=3)
+            for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion(max_steps=2000)
+    assert any(r.state == "rejected" for r in reqs), \
+        "seed 1 must trip at least one permanent fault"
+    assert all(r.state in TERMINAL_STATES for r in reqs)
+    eng._pool.assert_drained()
+
+
+# --------------------------------------------------------------------------
+# property test: randomized paged traffic, chaos armed
+# --------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), with_chaos=st.booleans(),
+       policy=st.sampled_from(["fifo", "edf", "slo-aware"]))
+def test_paged_random_traffic_page_invariants(parts, seed, with_chaos,
+                                              policy):
+    """Page-pool invariants under randomized traffic: at every quantum
+    {free} + {owned} exactly partition the pool (no lane can even address
+    a page it doesn't own — the table only carries owned ids), at drain
+    pages allocated == pages freed, and every request the engine finished
+    is token-exact (prefix under budget degradation) vs the bare
+    ReferenceEngine oracle — recycled lanes included."""
+    cfg, model, params = parts
+    rng = np.random.default_rng(seed)
+    slots = int(rng.integers(1, 4))
+    chaos = ChaosConfig(seed=seed, p_fault=0.2, p_slow=0.2,
+                        service_seconds=0.02, transient_tries=1) \
+        if with_chaos else None
+    eng = ServeEngine(model, params, slots=slots, max_len=32,
+                      decode_chunk=4, clock=VirtualClock(),
+                      paged=True, page_size=8,
+                      kv_pages=int(rng.integers(2, 5)) * slots,
+                      admission=AdmissionConfig(
+                          policy=policy,
+                          max_queue=int(rng.integers(2, 8))),
+                      chaos=chaos)
+    reqs = []
+    for i in range(int(rng.integers(1, 9))):
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, int(rng.integers(1, 33)),
+                                dtype=np.int32),
+            max_new_tokens=int(rng.integers(2, 7)),
+            deadline_s=float(rng.uniform(0.05, 2.0))
+            if rng.random() < 0.5 else None,
+            priority=int(rng.integers(0, 3))))
+    for r in reqs:
+        eng.submit(r)
+        eng.step()
+        eng._pool.check()
+    for _ in range(2000):
+        if not eng.queue and not any(eng.active):
+            break
+        eng.step()
+        eng._pool.check()
+        assert eng._pool.reserved_pages <= eng._pool.n_pages
+    assert not any(eng.active) and not eng.queue
+    assert all(r.state in TERMINAL_STATES for r in reqs)
+    eng._pool.assert_drained()
+    done = [r for r in reqs if r.state == "done"]
+    if done:
+        oracle = ReferenceEngine(model, params, slots=2, max_len=32)
+        oreqs = [Request(rid=r.rid, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens) for r in done]
+        for r in oreqs:
+            oracle.submit(r)
+        oracle.run_to_completion(max_steps=2000)
+        want = {r.rid: list(r.out) for r in oreqs}
+        for r in done:
+            assert list(r.out) == want[r.rid][:len(r.out)], r.rid
+            assert len(r.out) >= 1

@@ -54,11 +54,13 @@ def _extras(cfg, rng):
     return {}
 
 
-def _serve(engine_cls, model, params, prompts, extras, max_new=3):
+def _serve(engine_cls, model, params, prompts, extras, max_new=3,
+           **engine_kw):
     # src_len sizes the encoder-decoder cross-KV lanes; the vlm cross
     # cache sizes itself from cfg.n_image_tokens when src_len is 0
     src_len = SRC_LEN if model.cfg.encoder_decoder else 0
-    eng = engine_cls(model, params, slots=2, max_len=32, src_len=src_len)
+    eng = engine_cls(model, params, slots=2, max_len=32, src_len=src_len,
+                     **engine_kw)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=max_new,
                     extras=dict(extras))
             for i, p in enumerate(prompts)]
@@ -69,7 +71,8 @@ def _serve(engine_cls, model, params, prompts, extras, max_new=3):
     return eng, {r.rid: r.out for r in reqs}
 
 
-def _parity(arch: str, use_pallas: bool, n_prompts: int = 3):
+def _parity(arch: str, use_pallas: bool, n_prompts: int = 3,
+            paged: bool = False):
     cfg = reduced(get_arch(arch))
     model = Model(cfg, use_pallas=use_pallas)
     params = model.init(jax.random.PRNGKey(0))
@@ -77,14 +80,17 @@ def _parity(arch: str, use_pallas: bool, n_prompts: int = 3):
     prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
                for n in (4, 9, 6, 17, 12)[:n_prompts]]
     extras = _extras(cfg, rng)
+    kw = dict(paged=True, page_size=8) if paged else {}
     _, ref = _serve(ReferenceEngine, model, params, prompts, extras)
-    eng, new = _serve(ServeEngine, model, params, prompts, extras)
-    assert new == ref, (arch, use_pallas)
+    eng, new = _serve(ServeEngine, model, params, prompts, extras, **kw)
+    assert new == ref, (arch, use_pallas, paged)
     # the families this PR moved onto the bucket path must actually be on
     # it, and stay within the bounded-compile guarantee
     if cfg.family in ("dense", "ssm", "hybrid"):
         assert eng.bucketed
         assert eng.prefill_compiles <= eng.max_prefill_compiles
+    if paged:
+        eng._pool.assert_drained()
     for toks in new.values():
         assert all(0 <= t < cfg.vocab for t in toks)
 
@@ -105,3 +111,27 @@ def test_stateful_bucketed_parity_fast(arch):
     """Fast-gate subset: the two families newly on the bucketed prefill
     path stay token-exact (jnp backend; the full matrix is `slow`)."""
     _parity(arch, use_pallas=False, n_prompts=4)
+
+
+# Every bucketed-prefill family (the only ones the paged cache supports)
+PAGED_ARCHS = ["granite-8b", "mamba2-370m", "hymba-1.5b"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["reference", "pallas"])
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_parity_matrix(arch, use_pallas):
+    """Paged column: ServeEngine(paged=True) == ReferenceEngine,
+    token-exact, for every bucketed family on both backends, with the
+    page pool fully drained at the end."""
+    _parity(arch, use_pallas, n_prompts=5, paged=True)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("arch", ["granite-8b", "hymba-1.5b"])
+def test_paged_parity_fast(arch):
+    """Fast-gate subset of the paged column: one pure-attention and one
+    hybrid (ring + SSM state stays lane-resident while global-attention
+    KV pages)."""
+    _parity(arch, use_pallas=False, n_prompts=4, paged=True)

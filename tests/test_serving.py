@@ -57,6 +57,24 @@ def test_bucketed_engine_matches_reference_mixed_lengths():
     assert new == ref
 
 
+@pytest.mark.parametrize("arch", ["granite-8b", "mamba2-370m"])
+def test_single_slot_engine_matches_reference(arch):
+    """Regression: _probe_batch_axes used to hardcode axis 0 for every
+    leaf when slots == 1, scattering stacked-layer cache leaves (batch on
+    axis 1) along the LAYER axis — a 1-slot engine served garbage for the
+    first decode chunk while every layer past the first started from a
+    zeroed prefill. The axes are now probed from 2-vs-1-lane throwaway
+    trees regardless of slot count."""
+    cfg, model, params = _setup(arch)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, 6, dtype=np.int32)]
+    _, ref = _run(ReferenceEngine, model, params, prompts, max_new=16,
+                  slots=1, max_len=64)
+    _, new = _run(ServeEngine, model, params, prompts, max_new=16,
+                  slots=1, max_len=64)
+    assert new == ref
+
+
 def test_fused_decode_mixed_budgets():
     """Lanes with different budgets finish at the right lengths even when
     they share fused decode chunks."""
